@@ -1,0 +1,63 @@
+"""Paper Fig. 5: end-to-end FSL serving pipeline latency breakdown —
+backbone (accelerator) feature extraction vs NCM classification (host).
+
+The paper's point: the backbone dominates; the NCM head is cheap enough to
+stay on the CPU.  We measure both stages and report the split.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantConfig
+from repro.data.synthetic import SyntheticImages
+from repro.fsl import ncm
+from repro.models import resnet9
+
+WIDTH = 16
+
+
+def run(quick: bool = False):
+    key = jax.random.PRNGKey(0)
+    params = resnet9.init_params(key, WIDTH)
+    qcfg = QuantConfig.paper_w6a4()
+    data = SyntheticImages(n_base=4, n_novel=5, seed=0)
+    ep = data.episode(np.random.default_rng(0), 5, 5, 15)
+
+    feats = jax.jit(lambda x: resnet9.forward(params, x, qcfg, WIDTH))
+    sup = jnp.asarray(ep["support_x"])
+    qry = jnp.asarray(ep["query_x"])
+    sf = feats(sup)  # compile
+    qf = feats(qry)
+    jax.block_until_ready(qf)
+
+    t0 = time.time()
+    sf = feats(sup)
+    qf = feats(qry)
+    jax.block_until_ready(qf)
+    t_backbone = time.time() - t0
+
+    ncm_fn = jax.jit(lambda sf, sy, qf: ncm.ncm_classify(
+        qf, ncm.class_means(sf, sy, 5)))
+    sy = jnp.asarray(ep["support_y"])
+    pred = ncm_fn(sf, sy, qf)       # compile
+    jax.block_until_ready(pred)
+    t0 = time.time()
+    pred = ncm_fn(sf, sy, qf)
+    jax.block_until_ready(pred)
+    t_ncm = time.time() - t0
+    acc = float((pred == jnp.asarray(ep["query_y"])).mean())
+
+    print(f"fig5,backbone_ms,{t_backbone*1e3:.2f}")
+    print(f"fig5,ncm_ms,{t_ncm*1e3:.2f}")
+    print(f"fig5,backbone_fraction,{t_backbone/(t_backbone+t_ncm):.3f}")
+    print(f"fig5,episode_acc,{acc:.3f}")
+    return {"backbone_ms": t_backbone * 1e3, "ncm_ms": t_ncm * 1e3}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Benchmark entry point — one function per paper table/figure.
+
+Prints ``name,metric,value`` CSV lines. ``--quick`` trims iteration counts
+(used by the test suite); full runs reproduce EXPERIMENTS.md §Paper-validation.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: table2,table3,fig5,roofline")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else set()
+
+    def want(name):
+        return not only or name in only
+
+    t0 = time.time()
+    if want("table2"):
+        from benchmarks import table2_accuracy
+        table2_accuracy.run(quick=args.quick)
+    if want("table3"):
+        from benchmarks import table3_throughput
+        table3_throughput.run(quick=args.quick)
+    if want("fig5"):
+        from benchmarks import fig5_pipeline
+        fig5_pipeline.run(quick=args.quick)
+    if want("roofline"):
+        from benchmarks import roofline
+        try:
+            roofline.main("base", "16x16")
+        except Exception as e:  # artifacts may be absent on a fresh clone
+            print(f"roofline,skipped,{type(e).__name__}")
+    print(f"total,seconds,{time.time()-t0:.1f}")
+
+
+if __name__ == "__main__":
+    main()

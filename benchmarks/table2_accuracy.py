@@ -1,0 +1,51 @@
+"""Paper Table II: FSL accuracy vs bit-width configuration.
+
+Reproduces the STRUCTURE of the paper's result on the deterministic
+synthetic dataset (offline container — DESIGN.md §6): the same QuantConfig
+drives QAT training and evaluation; expected band ordering:
+
+    very-low-bit (≤5b conv)  <<  w6a4  ≈  w8..w16  (plateau)
+
+mirroring the paper's 44.89 / 59.70 / 60.92–62.78 structure.
+"""
+
+from __future__ import annotations
+
+import time
+
+from repro.core.quant import FixedPointSpec, QuantConfig
+from repro.data.synthetic import SyntheticImages
+from repro.fsl.pipeline import FSLPipeline, evaluate_episodes, pretrain_backbone
+
+# (label, conv bits.frac, act bits.frac) — mirrors the paper's Table II rows
+ROWS = [
+    ("w3.2a2.1 (collapse row)", FixedPointSpec(3, 2), FixedPointSpec(2, 1, signed=False)),
+    ("w6.5a4.2 (paper choice)", FixedPointSpec(6, 5), FixedPointSpec(4, 2, signed=False)),
+    ("w8.4a8.4", FixedPointSpec(8, 4), FixedPointSpec(8, 4, signed=False)),
+    ("w16.8a16.8 (conventional)", FixedPointSpec(16, 8), FixedPointSpec(16, 8, signed=False)),
+]
+
+WIDTH = 16
+STEPS = 120
+
+
+def run(quick: bool = False):
+    steps = 40 if quick else STEPS
+    episodes = 8 if quick else 20
+    data = SyntheticImages(n_base=24, n_novel=8, seed=0,
+                           signal=0.7, noise=0.2)    # hard-but-fair setting
+    rows = []
+    for label, wspec, aspec in ROWS:
+        qcfg = QuantConfig(weight=wspec, act=aspec)
+        pipe = FSLPipeline(width=WIDTH, qcfg=qcfg)
+        t0 = time.time()
+        pre = pretrain_backbone(data, pipe, steps=steps, batch=32)
+        acc, ci = evaluate_episodes(pre["params"], data, pipe,
+                                    n_episodes=episodes)
+        rows.append((label, acc, ci, time.time() - t0))
+        print(f"table2,{label},{acc*100:.2f},{ci*100:.2f}")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

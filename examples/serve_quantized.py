@@ -1,0 +1,14 @@
+"""Batched LM serving at reduced weight bit-width (the paper's lever applied
+to a transformer): generate with bf16 vs int8 vs packed-int4 weights and
+compare outputs + wall clock.
+
+  PYTHONPATH=src python examples/serve_quantized.py
+"""
+
+from repro.launch import serve
+
+for bits in (0, 8, 4):
+    print(f"\n== serving qwen2.5-3b (reduced config) at "
+          f"{'bf16' if bits == 0 else f'w{bits}'} ==")
+    serve.main(["--arch", "qwen2.5-3b", "--reduced",
+                "--bits", str(bits), "--tokens", "12", "--batch", "2"])

@@ -1,0 +1,22 @@
+"""Train a reduced-config assigned architecture end-to-end on CPU with the
+production train_step (grad accumulation, ZeRO-sharded AdamW, checkpoints,
+straggler monitor) — pass --arch any of the 10 assigned ids.
+
+  PYTHONPATH=src python examples/train_lm.py --arch mamba2-780m --steps 20
+"""
+
+import argparse
+import tempfile
+
+from repro.launch import train
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="qwen2.5-3b")
+ap.add_argument("--steps", type=int, default=20)
+args = ap.parse_args()
+
+with tempfile.TemporaryDirectory() as ckpt:
+    loss = train.main(["--arch", args.arch, "--reduced",
+                       "--steps", str(args.steps),
+                       "--ckpt-dir", ckpt, "--ckpt-every", "10"])
+print(f"final loss: {loss:.4f}")

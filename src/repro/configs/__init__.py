@@ -1,0 +1,25 @@
+"""Assigned-architecture configs (public-literature dims; see each module).
+
+Importing this package registers every config; ``--arch <id>`` resolves via
+:func:`repro.models.common.get_config`.
+"""
+
+from repro.configs import (  # noqa: F401
+    whisper_tiny,
+    phi3_medium_14b,
+    qwen2_5_3b,
+    qwen3_14b,
+    minicpm3_4b,
+    grok_1_314b,
+    arctic_480b,
+    qwen2_vl_7b,
+    mamba2_780m,
+    zamba2_7b,
+    resnet9_paper,
+)
+
+ASSIGNED = [
+    "whisper-tiny", "phi3-medium-14b", "qwen2.5-3b", "qwen3-14b",
+    "minicpm3-4b", "grok-1-314b", "arctic-480b", "qwen2-vl-7b",
+    "mamba2-780m", "zamba2-7b",
+]

@@ -1,0 +1,19 @@
+"""Core: arbitrary-bit-width quantization + FINN-style graph streamlining."""
+
+from repro.core.quant import (  # noqa: F401
+    FixedPointSpec,
+    QuantConfig,
+    dequantize,
+    fake_quant,
+    multithreshold,
+    pack_int4,
+    quantize,
+    thresholds_for,
+    unpack_int4,
+)
+from repro.core.graph import Graph, GraphBuildError, Node, execute  # noqa: F401
+from repro.core.build import (  # noqa: F401
+    DEFAULT_MLP_STEPS,
+    RESNET9_BUILD_STEPS,
+    build_dataflow,
+)

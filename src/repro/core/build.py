@@ -1,0 +1,53 @@
+"""FINN-style build-step pipelines (paper Sec. III-A).
+
+FINN drives hardware generation through an ordered list of transformation
+steps.  The paper's point is that this list is *architecture-dependent*: the
+tutorial MLP steps do not transfer to ResNet-9, which needs (1) the
+transpose-absorption fix and (2) the ReduceMean→GAP conversion, inserted in
+the right order.  Both step lists are exposed so the failure is reproducible
+(``tests/test_build.py`` asserts DEFAULT_MLP_STEPS raises on the ResNet-9
+graph while RESNET9_BUILD_STEPS builds it).
+"""
+
+from __future__ import annotations
+
+from typing import List, Sequence
+
+from repro.core import transforms as T
+from repro.core.graph import Graph
+
+__all__ = ["DEFAULT_MLP_STEPS", "RESNET9_BUILD_STEPS", "build_dataflow"]
+
+# The FINN tutorial flow for a plain MLP: no layout juggling, no spatial
+# reductions — streamline scales, fuse MVAUs, done.
+DEFAULT_MLP_STEPS: List[T.Transform] = [
+    T.MoveMulPastMatMul,
+    T.CollapseRepeatedMul,
+    T.FoldMulIntoMultiThreshold,
+    T.FuseMatMulThresholdToMVAU,
+    T.VerifyHWMappable,
+]
+
+# The paper's customized ResNet-9 flow ("introducing transformation classes
+# not included in the default build and rearranging the order as needed"):
+#   1. ReduceMean -> GlobalAccPool + Mul  (Sec. III-D)
+#   2. Absorb NHWC->NCHW transposes into MultiThreshold  (Sec. III-C)
+#   3. Cancel the re-emitted transposes against ingest transposes
+#   4. Push scales past matmuls, collapse, fold into thresholds
+#   5. Fuse MatMul+MultiThreshold -> MVAU, then gate on HW-mappability
+RESNET9_BUILD_STEPS: List[T.Transform] = [
+    T.ConvertReduceMeanToGAP,
+    T.AbsorbTransposeIntoMultiThreshold,
+    T.CancelTransposePairs,
+    T.MoveMulPastMatMul,
+    T.CollapseRepeatedMul,
+    T.FoldMulIntoMultiThreshold,
+    T.FuseMatMulThresholdToMVAU,
+    T.VerifyHWMappable,
+]
+
+
+def build_dataflow(graph: Graph, steps: Sequence[T.Transform]) -> Graph:
+    """Apply a build-step list; returns the HW-ready graph or raises
+    :class:`~repro.core.graph.GraphBuildError`."""
+    return T.apply_transforms(graph, steps)

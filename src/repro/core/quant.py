@@ -1,0 +1,271 @@
+"""Arbitrary fixed-point quantization — the paper's central design axis.
+
+The paper (FINN flow, Sec. III) trains with Brevitas at an exact
+``(total_bits, int_bits, frac_bits)`` fixed-point grid and deploys the *same*
+grid on hardware, "ensuring consistency in accuracy across the entire design
+flow".  This module is the single source of truth for that grid in this repo:
+the QAT trainer, the dataflow-graph interpreter, and the Pallas kernels all
+quantize through the functions here, so train-time and deploy-time numerics
+are bit-identical by construction.
+
+Conventions (matching the paper's Table II notation):
+
+* ``FixedPointSpec(total_bits=6, frac_bits=5)`` is the paper's
+  "6 bits (1 bit for the integer part and 5 bits for the fractional part)".
+  ``int_bits = total_bits - frac_bits`` and, for signed specs, includes the
+  sign bit (two's complement).
+* The representable grid is ``q * 2**-frac_bits`` for integer ``q`` in
+  ``[qmin, qmax]`` — signed: ``[-2**(t-1), 2**(t-1)-1]``, unsigned:
+  ``[0, 2**t - 1]``.
+* Rounding is round-half-to-even (``jnp.round``), clipping saturates.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "FixedPointSpec",
+    "QuantConfig",
+    "quantize",
+    "dequantize",
+    "fake_quant",
+    "thresholds_for",
+    "multithreshold",
+    "pack_int4",
+    "unpack_int4",
+    "storage_dtype",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class FixedPointSpec:
+    """A fixed-point number format: ``total_bits`` with ``frac_bits`` fraction.
+
+    ``signed`` follows the layer class: weights are signed; post-ReLU
+    activations may be unsigned (one extra magnitude bit for free, as in
+    FINN's unsigned MultiThreshold outputs).
+    """
+
+    total_bits: int
+    frac_bits: int
+    signed: bool = True
+
+    def __post_init__(self):
+        if not (1 <= self.total_bits <= 32):
+            raise ValueError(f"total_bits must be in [1,32], got {self.total_bits}")
+        if self.frac_bits < -32 or self.frac_bits > 32:
+            raise ValueError(f"unreasonable frac_bits {self.frac_bits}")
+        if self.signed and self.total_bits < 2:
+            raise ValueError("signed formats need >= 2 bits")
+
+    # ---- grid parameters -------------------------------------------------
+    @property
+    def int_bits(self) -> int:
+        """Integer bits, incl. sign for signed formats (paper's notation)."""
+        return self.total_bits - self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2.0 ** (-self.frac_bits))
+
+    @property
+    def qmin(self) -> int:
+        return -(2 ** (self.total_bits - 1)) if self.signed else 0
+
+    @property
+    def qmax(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1 if self.signed else 2**self.total_bits - 1
+
+    @property
+    def num_levels(self) -> int:
+        return 2**self.total_bits
+
+    @property
+    def min_value(self) -> float:
+        return self.qmin * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.qmax * self.scale
+
+    def describe(self) -> str:
+        sign = "s" if self.signed else "u"
+        return f"fx{sign}{self.total_bits}.{self.frac_bits}"
+
+
+# Layer-class → spec table, the paper's "bit-width configuration".
+# ``None`` for a class means keep floating point (the paper's 16-bit
+# "conventional" rows are FixedPointSpec(16, 8)).
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Per-layer-class bit-width assignment (paper Table II rows).
+
+    The paper distinguishes convolutional-layer ("Conv.") and activation
+    ("ReLU") bit-widths.  We generalize to named classes so transformer
+    linears, embeddings and caches can be assigned widths too.
+    """
+
+    weight: Optional[FixedPointSpec] = None  # conv / linear weights
+    act: Optional[FixedPointSpec] = None  # post-activation tensors
+    cache: Optional[FixedPointSpec] = None  # KV / SSM-state storage (serving)
+
+    @staticmethod
+    def paper_w6a4() -> "QuantConfig":
+        """The paper's chosen deployment point: conv 6b(1.5), act 4b(2.2)."""
+        return QuantConfig(
+            weight=FixedPointSpec(6, 5, signed=True),
+            act=FixedPointSpec(4, 2, signed=False),
+        )
+
+    @staticmethod
+    def paper_w16a16() -> "QuantConfig":
+        """The conventional (Tensil-era) 16-bit fixed-point baseline."""
+        return QuantConfig(
+            weight=FixedPointSpec(16, 8, signed=True),
+            act=FixedPointSpec(16, 8, signed=False),
+        )
+
+    @staticmethod
+    def table2_row(max_bits: int, conv_frac: int, act_frac: int,
+                   conv_bits: Optional[int] = None,
+                   act_bits: Optional[int] = None) -> "QuantConfig":
+        cb = conv_bits if conv_bits is not None else max_bits
+        ab = act_bits if act_bits is not None else max_bits
+        return QuantConfig(
+            weight=FixedPointSpec(cb, conv_frac, signed=True),
+            act=FixedPointSpec(ab, act_frac, signed=False),
+        )
+
+
+# --------------------------------------------------------------------------
+# Core quantize / dequantize
+# --------------------------------------------------------------------------
+def quantize(x: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    """Real → integer grid (int32 codes). Saturating, round-half-even."""
+    q = jnp.round(x * (1.0 / spec.scale))
+    q = jnp.clip(q, spec.qmin, spec.qmax)
+    return q.astype(jnp.int32)
+
+
+def dequantize(q: jax.Array, spec: FixedPointSpec) -> jax.Array:
+    return q.astype(jnp.float32) * spec.scale
+
+
+def fake_quant(x: jax.Array, spec: Optional[FixedPointSpec]) -> jax.Array:
+    """Quantize-dequantize with a straight-through gradient estimator.
+
+    This is the QAT operator (Brevitas' ``QuantIdentity``/weight-quant
+    analogue): forward runs on the exact deployment grid, backward passes the
+    gradient through unchanged inside the representable range.
+    """
+    if spec is None:
+        return x
+    qdq = dequantize(quantize(x, spec), spec).astype(x.dtype)
+    # STE with saturation-aware masking: no gradient where the forward clipped.
+    inside = jnp.logical_and(x >= spec.min_value, x <= spec.max_value)
+    ste = x * inside.astype(x.dtype)
+    return ste + jax.lax.stop_gradient(qdq - ste)
+
+
+# --------------------------------------------------------------------------
+# MultiThreshold — FINN's activation-quantization node (paper Sec. III-C)
+# --------------------------------------------------------------------------
+def thresholds_for(spec: FixedPointSpec) -> np.ndarray:
+    """Thresholds T s.t. ``qmin + Σᵢ 1[x ≥ Tᵢ]`` == ``quantize(x, spec)``.
+
+    FINN lowers every quantized activation to this compare-count form; the
+    MVAU then fuses it after the integer matmul.  With round-half-even the
+    exact crossover for level q is the midpoint ``(q - 0.5) * scale`` with the
+    tie going to the even side; we nudge by half an ulp so that a plain ``>=``
+    reproduces jnp.round's behaviour on the grid midpoints.
+    """
+    qs = np.arange(spec.qmin + 1, spec.qmax + 1, dtype=np.float64)
+    mids = (qs - 0.5) * spec.scale
+    # round-half-even: a value exactly at the midpoint (q-0.5)·s rounds to
+    # the EVEN of {q-1, q}.  For even q the midpoint belongs to level q, so
+    # T_q = mid (a ``>=`` compare includes it); for odd q it belongs to
+    # q-1, so T_q sits one float32 ulp above the midpoint.
+    odd = (np.abs(qs) % 2) == 1
+    mids = np.where(odd, np.nextafter(mids.astype(np.float32),
+                                      np.float32(np.inf)).astype(np.float64), mids)
+    return mids.astype(np.float32)
+
+
+def multithreshold(x: jax.Array, thresholds: jax.Array,
+                   out_base: int = 0, out_scale: float = 1.0,
+                   out_bias: float = 0.0) -> jax.Array:
+    """``out_scale * (out_base + Σᵢ 1[x ≥ Tᵢ]) + out_bias``.
+
+    ``thresholds`` is either ``(L,)`` (per-tensor) or ``(C, L)`` (per-channel,
+    with x's trailing dim = C after our NHWC canonicalization — see
+    transforms.AbsorbTransposeIntoMultiThreshold for why the trailing-dim
+    convention matters).
+    """
+    if thresholds.ndim == 1:
+        cmp = x[..., None] >= thresholds
+    elif thresholds.ndim == 2:
+        if x.shape[-1] != thresholds.shape[0]:
+            raise ValueError(
+                f"per-channel thresholds {thresholds.shape} vs x {x.shape}: "
+                "channel dim must be trailing (NHWC canonical form)")
+        cmp = x[..., None] >= thresholds
+    else:
+        raise ValueError("thresholds must be rank 1 or 2")
+    counts = jnp.sum(cmp, axis=-1).astype(jnp.float32)
+    return (out_scale * (out_base + counts) + out_bias).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# Sub-byte storage (TPU adaptation: narrow bits pay off in HBM bytes)
+# --------------------------------------------------------------------------
+def pack_int4(q: jax.Array) -> jax.Array:
+    """Pack int32 codes in [-8, 7] pairwise into int8 (low nibble = even idx).
+
+    The trailing dim must be even.  This is the storage format the w4a16
+    decode kernel unpacks in VMEM (shift/mask — Sec. 2 of DESIGN.md).
+    """
+    if q.shape[-1] % 2:
+        raise ValueError("trailing dim must be even to pack int4 pairs")
+    lo = (q[..., 0::2] & 0xF).astype(jnp.uint8)
+    hi = (q[..., 1::2] & 0xF).astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(packed: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`; returns int32 codes in [-8, 7]."""
+    p = packed.astype(jnp.int32) & 0xFF
+    lo = (p & 0xF).astype(jnp.int32)
+    hi = ((p >> 4) & 0xF).astype(jnp.int32)
+    # sign-extend nibbles
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    out = jnp.stack([lo, hi], axis=-1)
+    return out.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def storage_dtype(spec: FixedPointSpec) -> jnp.dtype:
+    """Narrowest dense dtype holding the codes (int4 packs via pack_int4)."""
+    if spec.total_bits <= 8:
+        return jnp.int8
+    if spec.total_bits <= 16:
+        return jnp.int16
+    return jnp.int32
+
+
+def storage_bytes_per_element(spec: Optional[FixedPointSpec],
+                              fp_bytes: int = 2) -> float:
+    """Effective HBM bytes/element — the roofline-facing quantity.
+
+    int4-and-below counts at its packed density; fp fallback counts bf16.
+    """
+    if spec is None:
+        return float(fp_bytes)
+    if spec.total_bits <= 4:
+        return 0.5
+    return float(np.dtype(storage_dtype(spec)).itemsize)

@@ -1,0 +1,9 @@
+"""Few-shot learning pipeline (paper Fig. 1 / Fig. 5): backbone features →
+NCM classification, with EASY-style augmented-shot ensembling."""
+
+from repro.fsl.ncm import ncm_accuracy, ncm_classify, class_means  # noqa: F401
+from repro.fsl.pipeline import (  # noqa: F401
+    FSLPipeline,
+    evaluate_episodes,
+    pretrain_backbone,
+)

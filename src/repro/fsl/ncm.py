@@ -1,0 +1,39 @@
+"""Nearest-Class-Mean classifier (paper Fig. 1 step 3, Fig. 5 CPU side).
+
+The backbone (FPGA/TPU side) emits feature vectors; the NCM head lives on
+the host: support features → per-class means; query features → nearest mean.
+Features are L2-normalized first (the EASY recipe the paper builds on)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _l2(x: jax.Array) -> jax.Array:
+    return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
+
+
+def class_means(features: jax.Array, labels: jax.Array, n_way: int
+                ) -> jax.Array:
+    """(N, D) support features + (N,) way-labels -> (n_way, D) means."""
+    f = _l2(features.astype(jnp.float32))
+    one = jax.nn.one_hot(labels, n_way, dtype=jnp.float32)       # (N, W)
+    sums = one.T @ f                                             # (W, D)
+    counts = jnp.maximum(one.sum(0)[:, None], 1.0)
+    return _l2(sums / counts)
+
+
+def ncm_classify(query_features: jax.Array, means: jax.Array) -> jax.Array:
+    """Nearest mean in cosine distance (== L2 on normalized vectors)."""
+    q = _l2(query_features.astype(jnp.float32))
+    sims = q @ means.T
+    return jnp.argmax(sims, axis=-1)
+
+
+def ncm_accuracy(query_features: jax.Array, query_labels: jax.Array,
+                 support_features: jax.Array, support_labels: jax.Array,
+                 n_way: int) -> jax.Array:
+    means = class_means(support_features, support_labels, n_way)
+    pred = ncm_classify(query_features, means)
+    return (pred == query_labels).mean()

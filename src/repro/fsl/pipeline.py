@@ -1,0 +1,94 @@
+"""End-to-end few-shot pipeline (paper Fig. 1): (1) backbone pretraining on
+base classes, (2) frozen-backbone feature extraction over support sets,
+(3) NCM inference over queries.
+
+The backbone runs at an arbitrary fixed-point bit-width (QuantConfig) — the
+whole point of the paper — and the SAME QuantConfig drives training and the
+deployed graph, so the accuracy measured here is the deployed accuracy.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quant import QuantConfig
+from repro.data.synthetic import SyntheticImages
+from repro.fsl import ncm
+from repro.models import resnet9
+from repro.optim import adamw_init, adamw_update, cosine_warmup
+
+
+@dataclasses.dataclass
+class FSLPipeline:
+    width: int = 16
+    qcfg: Optional[QuantConfig] = None
+    n_way: int = 5
+    k_shot: int = 5
+    n_query: int = 15
+    easy_augment: bool = True   # EASY-style augmented shots (flip ensembling)
+
+    def features(self, params, x: jax.Array) -> jax.Array:
+        f = resnet9.forward(params, x, self.qcfg, self.width)
+        if self.easy_augment:
+            f = f + resnet9.forward(params, x[:, :, ::-1], self.qcfg, self.width)
+        return f
+
+
+def pretrain_backbone(data: SyntheticImages, pipe: FSLPipeline, steps: int = 150,
+                      batch: int = 64, lr: float = 2e-3, seed: int = 0,
+                      log_every: int = 0) -> Dict:
+    """Base-class pretraining: backbone + linear head, CE loss, AdamW."""
+    key = jax.random.PRNGKey(seed)
+    kb, kh = jax.random.split(key)
+    params = {"backbone": resnet9.init_params(kb, pipe.width),
+              "head": {"w": jax.random.normal(
+                  kh, (resnet9.feature_dim(pipe.width), data.n_base),
+                  jnp.float32) * 0.02}}
+    opt = adamw_init(params)
+    sched = cosine_warmup(lr, warmup=max(steps // 20, 1), total=steps)
+
+    def loss_fn(p, x, y):
+        f = resnet9.forward(p["backbone"], x, pipe.qcfg, pipe.width)
+        logits = f @ p["head"]["w"]
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]
+        return (lse - gold).mean()
+
+    @jax.jit
+    def step_fn(p, o, x, y):
+        loss, grads = jax.value_and_grad(loss_fn)(p, x, y)
+        p, o = adamw_update(p, grads, o, sched, weight_decay=1e-4)
+        return p, o, loss
+
+    rng = np.random.default_rng(seed)
+    losses = []
+    for i in range(steps):
+        x, y = data.base_batch(rng, batch)
+        params, opt, loss = step_fn(params, opt, jnp.asarray(x), jnp.asarray(y))
+        losses.append(float(loss))
+        if log_every and i % log_every == 0:
+            print(f"  pretrain step {i:4d} loss {losses[-1]:.4f}")
+    return {"params": params["backbone"], "losses": losses}
+
+
+def evaluate_episodes(backbone_params, data: SyntheticImages, pipe: FSLPipeline,
+                      n_episodes: int = 20, seed: int = 100) -> Tuple[float, float]:
+    """Mean ± 95% CI accuracy over novel-class episodes (paper Table II)."""
+    feats = jax.jit(lambda x: pipe.features(backbone_params, x))
+    rng = np.random.default_rng(seed)
+    accs = []
+    for _ in range(n_episodes):
+        ep = data.episode(rng, pipe.n_way, pipe.k_shot, pipe.n_query)
+        sf = feats(jnp.asarray(ep["support_x"]))
+        qf = feats(jnp.asarray(ep["query_x"]))
+        acc = ncm.ncm_accuracy(qf, jnp.asarray(ep["query_y"]),
+                               sf, jnp.asarray(ep["support_y"]), pipe.n_way)
+        accs.append(float(acc))
+    accs = np.asarray(accs)
+    ci = 1.96 * accs.std() / np.sqrt(len(accs))
+    return float(accs.mean()), float(ci)

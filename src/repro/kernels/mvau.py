@@ -1,0 +1,132 @@
+"""Pallas MVAU — the TPU adaptation of FINN's Matrix-Vector-Activation Unit.
+
+FINN's MVAU streams BRAM-resident weights through an integer MAC array and
+applies MultiThreshold activation in the same pipeline stage, never touching
+DRAM between matmul and activation.  The TPU analogue implemented here:
+
+* weights tile HBM→VMEM once per (bn, bk) block (BlockSpec pipeline — Pallas
+  double-buffers automatically), the MXU consumes them at int8/bf16,
+* the int32/f32 accumulator lives in a VMEM scratch across the K grid axis,
+* MultiThreshold (compare-count against the per-channel threshold block) runs
+  on the VPU *before* the tile is written back — matmul and activation fuse
+  exactly as in the FINN dataflow edge, eliminating the HBM round-trip of the
+  intermediate.
+
+Two datapaths, selected by operand dtype:
+  int8 × int8 → int32 accumulate, int32 thresholds  (the FINN path proper)
+  f32/bf16    → f32 accumulate, f32 thresholds      (QAT-grid floats)
+
+Grid: ``(M/bm, N/bn, K/bk)`` with K innermost (sequential accumulation).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_THRESH_CHUNK = 32  # L is tiled so the (bm, bn, chunk) compare fits VMEM
+
+
+def _mvau_kernel(x_ref, w_ref, t_ref, o_ref, acc_ref, *,
+                 n_k: int, n_levels: int, out_base: float, out_scale: float,
+                 out_bias: float, int_path: bool, out_dtype):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    if int_path:
+        acc_ref[...] += jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    else:
+        acc_ref[...] += jax.lax.dot_general(
+            x.astype(jnp.float32), w.astype(jnp.float32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _activate():
+        acc = acc_ref[...]                      # (bm, bn)
+        counts = jnp.zeros(acc.shape, jnp.int32)
+        # Chunked compare-count: thresholds block is (bn, L); compare the
+        # (bm, bn, chunk) slab and reduce, keeping VMEM bounded for large L
+        # (e.g. 8-bit activations -> L = 255).
+        for l0 in range(0, n_levels, _THRESH_CHUNK):
+            l1 = min(l0 + _THRESH_CHUNK, n_levels)
+            t = t_ref[:, l0:l1]                 # (bn, chunk)
+            cmp = acc[:, :, None] >= t[None, :, :]
+            counts += jnp.sum(cmp.astype(jnp.int32), axis=-1)
+        y = out_scale * (out_base + counts.astype(jnp.float32)) + out_bias
+        o_ref[...] = y.astype(out_dtype)
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
+    pad = (-x.shape[axis]) % mult
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_base", "out_scale", "out_bias", "bm", "bn", "bk",
+                     "interpret"))
+def mvau_pallas(x: jax.Array, w: jax.Array, thresholds: jax.Array,
+                out_base: float = 0.0, out_scale: float = 1.0,
+                out_bias: float = 0.0, bm: int = 128, bn: int = 128,
+                bk: int = 128, interpret: bool = False) -> jax.Array:
+    """Fused ``multithreshold(x @ w)``; see module docstring.
+
+    x: (M, K); w: (K, N); thresholds: (N, L) (per-tensor (L,) is broadcast by
+    the ops.py wrapper).  int8 operands take the integer datapath (int32
+    thresholds required); anything else runs f32.
+    """
+    if x.ndim != 2 or w.ndim != 2 or thresholds.ndim != 2:
+        raise ValueError("mvau_pallas expects 2-D x, w and (N, L) thresholds")
+    m, kdim = x.shape
+    _, n = w.shape
+    n_levels = thresholds.shape[1]
+    int_path = x.dtype == jnp.int8 and w.dtype == jnp.int8
+    out_dtype = jnp.float32
+
+    # Pad to block multiples (K zero-pad is exact for matmul; padded N/M
+    # rows/cols are sliced off below; +inf thresholds keep padded-channel
+    # counts at zero rather than garbage).
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, bn)
+    big = jnp.iinfo(jnp.int32).max if thresholds.dtype == jnp.int32 else jnp.inf
+    tp = _pad_to(thresholds, 0, bn, value=big)
+    mp, kp = xp.shape
+    np_ = wp.shape[1]
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    kernel = functools.partial(
+        _mvau_kernel, n_k=grid[2], n_levels=n_levels, out_base=float(out_base),
+        out_scale=float(out_scale), out_bias=float(out_bias),
+        int_path=int_path, out_dtype=out_dtype)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn, n_levels), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.int32 if int_path else jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, wp, tp)
+    return out[:m, :n]

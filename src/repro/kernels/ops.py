@@ -1,0 +1,79 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+These normalize ranks (leading batch dims flatten into M), broadcast
+per-tensor thresholds to the per-channel (N, L) form the kernels expect, and
+pick ``interpret=True`` automatically off-TPU so the same call sites run in
+CI (CPU) and production (TPU).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import FixedPointSpec
+from repro.kernels.gap import gap_pallas
+from repro.kernels.mvau import mvau_pallas
+from repro.kernels.qmatmul import qmatmul_pallas
+
+__all__ = ["mvau", "mvau_int", "qmatmul", "gap", "default_interpret"]
+
+
+def default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _as_2d(x: jax.Array):
+    lead = x.shape[:-1]
+    return x.reshape(-1, x.shape[-1]), lead
+
+
+def _thresholds_2d(t: jax.Array, n: int) -> jax.Array:
+    if t.ndim == 1:
+        return jnp.broadcast_to(t[None, :], (n, t.shape[0]))
+    return t
+
+
+def mvau(x: jax.Array, w: jax.Array, thresholds: jax.Array,
+         out_base: float = 0.0, out_scale: float = 1.0, out_bias: float = 0.0,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """Fused ``multithreshold(x @ w)`` — float/QAT-grid datapath."""
+    interpret = default_interpret() if interpret is None else interpret
+    x2, lead = _as_2d(x)
+    t2 = _thresholds_2d(jnp.asarray(thresholds, jnp.float32), w.shape[1])
+    y = mvau_pallas(x2.astype(jnp.float32), w.astype(jnp.float32), t2,
+                    out_base=float(out_base), out_scale=float(out_scale),
+                    out_bias=float(out_bias), interpret=interpret)
+    return y.reshape(*lead, w.shape[1])
+
+
+def mvau_int(x_codes: jax.Array, w_codes: jax.Array, thresholds_int: jax.Array,
+             out_base: int = 0,
+             interpret: Optional[bool] = None) -> jax.Array:
+    """Integer MVAU: int8 codes × int8 codes, int32 thresholds (FINN path)."""
+    interpret = default_interpret() if interpret is None else interpret
+    if x_codes.dtype != jnp.int8 or w_codes.dtype != jnp.int8:
+        raise ValueError("mvau_int requires int8 operand codes")
+    x2, lead = _as_2d(x_codes)
+    t2 = _thresholds_2d(jnp.asarray(thresholds_int, jnp.int32), w_codes.shape[1])
+    y = mvau_pallas(x2, w_codes, t2, out_base=float(out_base),
+                    interpret=interpret)
+    return y.astype(jnp.int32).reshape(*lead, w_codes.shape[1])
+
+
+def qmatmul(x: jax.Array, w_codes: jax.Array, scale: jax.Array, bits: int = 8,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Weight-only quantized matmul (w8a16 / w4a16 serving path)."""
+    interpret = default_interpret() if interpret is None else interpret
+    x2, lead = _as_2d(x)
+    n = w_codes.shape[1] * (2 if bits == 4 else 1)
+    y = qmatmul_pallas(x2, w_codes, scale, bits=bits, interpret=interpret)
+    return y.reshape(*lead, n)
+
+
+def gap(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
+    """GlobalAccPool spatial sum (N, H, W, C) -> (N, C)."""
+    interpret = default_interpret() if interpret is None else interpret
+    return gap_pallas(x, interpret=interpret)

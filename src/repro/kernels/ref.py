@@ -1,0 +1,73 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantic ground truth: each kernel's test sweeps shapes/dtypes
+and asserts allclose against the function here.  They are also the
+"interpreted" execution path used in documentation examples.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def mvau(x: jax.Array, w: jax.Array, thresholds: jax.Array,
+         out_base: int = 0, out_scale: float = 1.0,
+         out_bias: float = 0.0) -> jax.Array:
+    """Matrix-Vector-Activation Unit: ``threshold_count(x @ w)``.
+
+    x: (..., K) float (values on a fixed-point grid), w: (K, N),
+    thresholds: (L,) or (N, L).  Output: float32 codes
+    ``out_scale * (out_base + Σᵢ 1[y ≥ Tᵢ]) + out_bias``.
+    """
+    y = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+    return quant.multithreshold(y, thresholds, out_base, out_scale, out_bias)
+
+
+def mvau_int(x_codes: jax.Array, w_codes: jax.Array, thresholds_int: jax.Array,
+             out_base: int = 0) -> jax.Array:
+    """Integer-domain MVAU: int8 codes, int32 accumulate, int32 thresholds.
+
+    This is the FINN datapath proper — scales have been folded into the
+    thresholds, so the arithmetic is exact integer compare-count.
+    """
+    acc = jnp.matmul(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32))
+    if thresholds_int.ndim == 1:
+        cmp = acc[..., None] >= thresholds_int
+    else:
+        cmp = acc[..., None] >= thresholds_int  # (..., N, L) vs (N, L)
+    return (out_base + jnp.sum(cmp, axis=-1)).astype(jnp.int32)
+
+
+def qmatmul(x: jax.Array, w_codes: jax.Array, scale: jax.Array,
+            bits: int = 8) -> jax.Array:
+    """Weight-only quantized matmul: ``x @ (codes * scale)``.
+
+    x: (..., K) bf16/f32; w_codes: int8 (K, N) for bits==8 or packed int4
+    (K, N//2) for bits==4; scale: per-output-channel (N,) or scalar.
+
+    Contract note: activations are consumed at **bf16** (MXU input
+    precision); codes are exact in bf16 (|code| ≤ 127 < 2^8 mantissa).
+    Accumulation is f32.
+    """
+    if bits == 4:
+        w_int = quant.unpack_int4(w_codes)
+    elif bits == 8:
+        w_int = w_codes.astype(jnp.int32)
+    else:
+        raise ValueError(f"unsupported weight bits {bits}")
+    x16 = x.astype(jnp.bfloat16).astype(jnp.float32)
+    acc = jnp.matmul(x16, w_int.astype(jnp.float32))
+    return (acc * scale).astype(x.dtype)
+
+
+def gap(x: jax.Array) -> jax.Array:
+    """GlobalAccPool: spatial **sum** (N,H,W,C) -> (N,C); no division
+    (paper Sec. III-D) — integer inputs accumulate in int32."""
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        return jnp.sum(x.astype(jnp.int32), axis=(1, 2))
+    return jnp.sum(x.astype(jnp.float32), axis=(1, 2))

@@ -1,0 +1,113 @@
+"""Assigned input-shape sets + ShapeDtypeStruct stand-ins per (arch × shape).
+
+Every tensor the dry-run lowers comes from here: weak-type-correct,
+shardable, zero allocation.  ``cell_supported`` encodes the assignment's
+skip rules (long_500k only for sub-quadratic families; encoder-only would
+skip decode — none assigned).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArchConfig
+
+SDS = jax.ShapeDtypeStruct
+
+SHAPES: Dict[str, Dict] = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def cell_supported(cfg: ArchConfig, shape_name: str) -> Tuple[bool, str]:
+    sh = SHAPES[shape_name]
+    if shape_name == "long_500k" and cfg.family not in ("ssm", "hybrid"):
+        return False, ("full O(L^2) attention at 524k is not deployable; "
+                       "assignment says skip for pure full-attention archs")
+    return True, ""
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str) -> Dict[str, SDS]:
+    """Host-side batch tensors for the cell's entry point."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    kind = sh["kind"]
+    i32, bf16 = jnp.int32, jnp.bfloat16
+
+    if kind == "train":
+        # batches arrive pre-microbatched (n_micro, mb, ...) so the grad-accum
+        # scan needs no resharding reshape (see steps.make_train_step)
+        n_micro = max(cfg.grad_accum, 1)
+        assert B % n_micro == 0, (cfg.name, shape_name)
+        mb = B // n_micro
+
+        if cfg.family == "audio":
+            return {
+                "frames": SDS((n_micro, mb, cfg.enc_seq, cfg.d_model), bf16),
+                "tokens": SDS((n_micro, mb, S), i32),
+                "labels": SDS((n_micro, mb, S), i32),
+            }
+        if cfg.family == "vlm":
+            P_ = cfg.vision_patches
+            return {
+                "patch_embeds": SDS((n_micro, mb, P_, cfg.d_model), bf16),
+                "tokens": SDS((n_micro, mb, S - P_), i32),
+                "labels": SDS((n_micro, mb, S - P_), i32),
+            }
+        return {"tokens": SDS((n_micro, mb, S), i32),
+                "labels": SDS((n_micro, mb, S), i32)}
+
+    if kind == "prefill":
+        if cfg.family == "audio":
+            return {"frames": SDS((B, cfg.enc_seq, cfg.d_model), bf16),
+                    "tokens": SDS((B, S), i32)}
+        if cfg.family == "vlm":
+            P_ = cfg.vision_patches
+            return {"patch_embeds": SDS((B, P_, cfg.d_model), bf16),
+                    "tokens": SDS((B, S - P_), i32)}
+        return {"tokens": SDS((B, S), i32)}
+
+    # decode: one new token against a seq_len-deep cache
+    return {"tokens": SDS((B, 1), i32)}
+
+
+def cache_specs(cfg: ArchConfig, shape_name: str, dtype=jnp.bfloat16):
+    """Decode-cache ShapeDtypeStructs via eval_shape of the real init."""
+    sh = SHAPES[shape_name]
+    B, S = sh["batch"], sh["seq"]
+    if cfg.family == "audio":
+        from repro.models import whisper
+        return jax.eval_shape(
+            lambda: whisper.init_cache(cfg, B, S, dtype=dtype))
+    from repro.models import lm
+    return jax.eval_shape(lambda: lm.init_cache(cfg, B, S, dtype=dtype))
+
+
+def param_specs(cfg: ArchConfig, serving_bits: int = 0,
+                dtype=None):
+    """Parameter ShapeDtypeStructs (optionally serving-quantized /
+    dtype-overridden: serving uses bf16, >50B training uses bf16 states)."""
+    if cfg.family == "audio":
+        from repro.models import whisper as mod
+    else:
+        from repro.models import lm as mod
+
+    def build():
+        p = mod.init_params(jax.random.PRNGKey(0), cfg)
+        if dtype is not None:
+            p = jax.tree.map(
+                lambda a: a.astype(dtype)
+                if a.dtype == jnp.float32 else a, p)
+        if serving_bits:
+            from repro.launch.steps import quantize_tree_for_serving
+            p = quantize_tree_for_serving(p, serving_bits)
+        return p
+
+    return jax.eval_shape(build)

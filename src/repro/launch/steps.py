@@ -1,0 +1,156 @@
+"""Train / prefill / decode step builders — the functions the dry-run lowers
+and a real launcher executes.
+
+``make_train_step``: microbatch grad-accumulation scan → grad clip →
+(optional int8 error-feedback compression at the pod boundary) → AdamW with
+ZeRO-1-sharded moments.  ``make_decode_step``: one-token serve step with
+donated cache; weights optionally serving-quantized (w8/w4) — the paper's
+bit-width lever on the HBM roofline term.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist import act_sharding
+from repro.dist.compression import ef_compress_tree
+from repro.models import lm, whisper
+from repro.models.common import ArchConfig
+from repro.optim import adamw_update, clip_by_global_norm
+
+Params = Any
+
+
+def model_module(cfg: ArchConfig):
+    return whisper if cfg.family == "audio" else lm
+
+
+def train_dtype_policy(cfg: ArchConfig):
+    """(param_dtype, moment_dtype, grad_accum_dtype).
+
+    >50B params: bf16 storage everywhere (update math stays f32 inside
+    adamw_update) — the only way 300-480B model states fit 16 GB/chip on a
+    single pod (EXPERIMENTS.md §Dry-run discusses the numbers).
+    """
+    if cfg.n_params() > 5e10:
+        return jnp.bfloat16, jnp.bfloat16, jnp.bfloat16
+    return jnp.float32, jnp.float32, jnp.float32
+
+
+def quantize_tree_for_serving(params: Params, bits: int) -> Params:
+    """Walk the param tree converting every dense 'w' (2-D+) to int codes.
+
+    Norm gains, biases, positions, conv kernels and SSM scalars stay fp —
+    matching the paper's practice (thresholds/BN folded, datapath weights
+    quantized).  Embedding tables stay bf16 (gather-indexed, not matmul'd).
+    """
+    from repro.models.layers import quantize_dense_for_serving
+
+    def walk(tree, path=()):
+        if isinstance(tree, dict):
+            if "w" in tree and isinstance(tree["w"], (jax.Array, jax.ShapeDtypeStruct)) \
+                    and getattr(tree["w"], "ndim", 0) >= 2 \
+                    and not any(p in ("gnorm",) for p in path):
+                return quantize_dense_for_serving(tree, bits)
+            return {k: walk(v, path + (k,)) for k, v in tree.items()}
+        return tree
+
+    out = walk(params)
+    # MoE expert banks + embed stay as plain arrays; quantize expert banks too
+    def quant_moe(tree):
+        if isinstance(tree, dict):
+            new = {}
+            for k, v in tree.items():
+                if k in ("w_gate", "w_up", "w_down") and not isinstance(v, dict) \
+                        and getattr(v, "ndim", 0) >= 3:
+                    new[k] = quantize_dense_for_serving({"w": v}, bits)
+                else:
+                    new[k] = quant_moe(v)
+            return new
+        return tree
+
+    return quant_moe(out)
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ArchConfig, *, compress_pod_grads: bool = False,
+                    lr: float = 1e-4, acc_shardings=None,
+                    grad_dtype=None) -> Callable:
+    """Returns train_step(params, opt_state, batch[, residuals]) ->
+    (params, opt_state, loss[, residuals]).
+
+    batch tensors are pre-microbatched: (n_micro, mb, ...).
+
+    ``acc_shardings`` (optional pytree of NamedShardings, usually the ZeRO-1
+    moment shardings): constrains the gradient-accumulation buffer so each
+    microbatch contributes via a cheap reduce-scatter instead of a full
+    all-reduce of replicated grads — the accumulate-then-reduce-once pattern.
+    """
+    mod = model_module(cfg)
+
+    _, _, gdtype = train_dtype_policy(cfg)
+    if grad_dtype is not None:
+        gdtype = grad_dtype
+
+    def train_step(params, opt_state, batch, residuals=None):
+        def micro_step(acc, mb_batch):
+            loss, grads = jax.value_and_grad(mod.loss_fn)(params, mb_batch, cfg)
+            acc = jax.tree.map(lambda a, g: a + g.astype(a.dtype), acc, grads)
+            if acc_shardings is not None:
+                acc = jax.tree.map(jax.lax.with_sharding_constraint,
+                                   acc, acc_shardings)
+            return acc, loss
+
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, gdtype), params)
+        if acc_shardings is not None:
+            acc0 = jax.tree.map(jax.lax.with_sharding_constraint,
+                                acc0, acc_shardings)
+        acc, losses = jax.lax.scan(micro_step, acc0, batch)
+        n_micro = jax.tree.leaves(batch)[0].shape[0]
+        grads = jax.tree.map(lambda g: g / n_micro, acc)
+
+        new_res = residuals
+        if compress_pod_grads and residuals is not None:
+            # int8 EF compression at the pod boundary (DESIGN.md Sec. 5):
+            # quantize-decompress before the cross-pod portion of the
+            # all-reduce; the residual carries the error to the next step.
+            grads, new_res = ef_compress_tree(grads, residuals)
+
+        grads, _ = clip_by_global_norm(grads, 1.0)
+        params, opt_state = adamw_update(params, grads, opt_state, lr,
+                                         weight_decay=0.1)
+        if residuals is None:
+            return params, opt_state, losses.mean()
+        return params, opt_state, losses.mean(), new_res
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+def make_prefill_step(cfg: ArchConfig) -> Callable:
+    mod = model_module(cfg)
+
+    def prefill_step(params, batch):
+        return mod.prefill(params, batch, cfg)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    mod = model_module(cfg)
+
+    def decode_step(params, batch, cache):
+        logits, new_cache = mod.decode_step(params, batch["tokens"], cache, cfg)
+        # greedy next token over the TRUE vocab range (padding excluded)
+        next_tok = jnp.argmax(logits[..., :cfg.vocab], axis=-1)
+        return next_tok.astype(jnp.int32), new_cache
+
+    return decode_step

@@ -1,0 +1,663 @@
+"""Model building blocks (pure-functional JAX; params are plain dict trees).
+
+Every linear layer routes through :func:`dense` which applies the paper's
+fixed-point fake-quantization to weights (QAT) or consumes pre-quantized
+int8/int4 codes (serving) — the technique is a first-class property of the
+substrate, not a bolt-on.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quant import FixedPointSpec, QuantConfig, fake_quant, pack_int4, quantize
+from repro.dist.act_sharding import constrain
+
+Params = Dict[str, jax.Array]
+
+
+# ---------------------------------------------------------------------------
+# Quant-aware dense
+# ---------------------------------------------------------------------------
+def dense_init(key, d_in: int, d_out: int, bias: bool = False,
+               stack: Tuple[int, ...] = ()) -> Params:
+    scale = 1.0 / math.sqrt(d_in)
+    p = {"w": jax.random.uniform(key, (*stack, d_in, d_out), jnp.float32,
+                                 -scale, scale)}
+    if bias:
+        p["b"] = jnp.zeros((*stack, d_out), jnp.float32)
+    return p
+
+
+def quantize_dense_for_serving(p: Params, bits: int) -> Params:
+    """fp weights -> {w_codes, w_scale} for the w8/w4 decode path.
+
+    Per-output-channel symmetric scales (beyond-paper: the paper uses a
+    global power-of-2 grid; per-channel is strictly more accurate at the
+    same bit-width and free on TPU — the scale multiplies the f32
+    accumulator once per tile, see kernels/qmatmul.py).
+    """
+    w = p["w"]
+    qmax = 2 ** (bits - 1) - 1
+    amax = jnp.max(jnp.abs(w), axis=-2, keepdims=True)  # (..., 1, N)
+    scale = jnp.maximum(amax / qmax, 1e-12)
+    codes = jnp.clip(jnp.round(w / scale), -qmax - 1, qmax)
+    if bits == 4:
+        codes = pack_int4(codes.astype(jnp.int32))      # (..., K, N//2)
+    else:
+        codes = codes.astype(jnp.int8)
+    out = {"w_codes": codes, "w_scale": scale[..., 0, :].astype(jnp.float32)}
+    if "b" in p:
+        out["b"] = p["b"]
+    return out
+
+
+def dense(p: Params, x: jax.Array, wspec: Optional[FixedPointSpec] = None,
+          dtype=jnp.bfloat16) -> jax.Array:
+    """y = x @ W (+ b). Three weight datapaths:
+
+    * fp / QAT:  ``W`` fake-quantized to the paper's grid when ``wspec``.
+    * w8 codes:  int8 ``w_codes`` × f32 per-channel ``w_scale`` (scale applied
+      to the accumulator — XLA fuses this; the Pallas qmatmul kernel is the
+      hand-tiled TPU variant of the same contraction).
+    * w4 codes:  packed int4 codes, unpacked inline.
+    """
+    if "w_codes" in p:
+        codes = p["w_codes"]
+        if codes.shape[-1] != p["w_scale"].shape[-1]:   # packed w4
+            from repro.core.quant import unpack_int4
+            codes = unpack_int4(codes)
+        acc = jnp.matmul(x.astype(dtype), codes.astype(dtype),
+                         preferred_element_type=jnp.float32)
+        y = (acc * p["w_scale"]).astype(dtype)
+    else:
+        w = fake_quant(p["w"], wspec) if wspec is not None else p["w"]
+        y = jnp.matmul(x.astype(dtype), w.astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+def rmsnorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm(p: Params, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * p["g"]).astype(x.dtype)
+
+
+def layernorm_init(d: int) -> Params:
+    return {"g": jnp.ones((d,), jnp.float32), "b": jnp.zeros((d,), jnp.float32)}
+
+
+def layernorm(p: Params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.mean((xf - mu) ** 2, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps) * p["g"] + p["b"]).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (RoPE and Qwen2-VL's M-RoPE)
+# ---------------------------------------------------------------------------
+def _rope_freqs(hd: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd); positions: (B, S) int32."""
+    hd = x.shape[-1]
+    ang = positions[..., None].astype(jnp.float32) * _rope_freqs(hd, theta)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections=(2, 3, 3)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions3 (3, B, S) = (t, h, w) ids.
+
+    Frequency dims are split into `sections` (×2 interleave) with each
+    section rotated by its own position stream.  Text tokens carry t==h==w,
+    which degenerates to standard RoPE (tested).
+    """
+    hd = x.shape[-1]
+    freqs = _rope_freqs(hd, theta)                      # (hd/2,)
+    n = hd // 2
+    total = sum(sections)
+    bounds, acc = [], 0
+    for s in sections:
+        acc += round(n * s / total)
+        bounds.append(acc)
+    bounds[-1] = n
+    sec_id = jnp.searchsorted(jnp.asarray(bounds), jnp.arange(n), side="right")
+    pos = positions3[sec_id.clip(0, 2)]                 # (n, B, S) gather streams
+    ang = jnp.moveaxis(pos, 0, -1).astype(jnp.float32) * freqs  # (B, S, n)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., 0::2], x[..., 1::2]
+    out = jnp.stack([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention (GQA + cache + chunked/flash prefill + cross-attention)
+# ---------------------------------------------------------------------------
+def attn_init(key, cfg, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, H * hd, bias=cfg.qkv_bias),
+         "wk": dense_init(ks[1], d, KV * hd, bias=cfg.qkv_bias),
+         "wv": dense_init(ks[2], d, KV * hd, bias=cfg.qkv_bias),
+         "wo": dense_init(ks[3], H * hd, d)}
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd)
+        p["k_norm"] = rmsnorm_init(hd)
+    return p
+
+
+def _sdpa(q, k, v, causal: bool, q_offset=0) -> jax.Array:
+    """Plain attention: q (B,Sq,H,hd), k/v (B,Sk,KV,hd). GQA broadcast."""
+    q = constrain(q, "attn_q_rows")
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    rep = H // KV
+    qh = q.reshape(B, Sq, KV, rep, hd)
+    scores = jnp.einsum("bqgrh,bkgh->bgrqk", qh.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(hd)
+    if causal:
+        iq = jnp.arange(Sq) + q_offset
+        ik = jnp.arange(k.shape[1])
+        scores = jnp.where(ik[None, :] <= iq[:, None], scores, -jnp.inf)
+    w = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bgrqk,bkgh->bqgrh", w, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+def _chunked_sdpa(q, k, v, chunk: int, causal: bool = True) -> jax.Array:
+    """Flash-style online-softmax attention, O(chunk·Sk) memory.
+
+    Query blocks scan sequentially; each block scans kv blocks with running
+    (max, denom, acc). Used for long prefill where materializing (Sq, Sk)
+    scores is impossible (32k: 4 GiB/head).
+    """
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    nq = Sq // chunk
+    nk = Sk // chunk
+    qb = q.reshape(B, nq, chunk, KV, rep, hd)
+    kb = k.reshape(B, nk, chunk, KV, hd)
+    vb = v.reshape(B, nk, chunk, KV, hd)
+    scale = 1.0 / math.sqrt(hd)
+
+    def q_block(_, iq):
+        qi = constrain(qb[:, iq].astype(jnp.float32), "attn_chunk_q")
+        # (B, c, KV, rep, hd) — chunk rows shard over the model axis under
+        # the attnsp rule; hd/KV stay replicated so QK/AV contract locally
+        m0 = jnp.full((B, KV, rep, chunk), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KV, rep, chunk), jnp.float32)
+        a0 = jnp.zeros((B, chunk, KV, rep, hd), jnp.float32)
+
+        def kv_block(carry, ik):
+            m, l, acc = carry
+            kj = kb[:, ik].astype(jnp.float32)
+            vj = vb[:, ik].astype(jnp.float32)
+            s = jnp.einsum("bqgrh,bkgh->bgrqk", qi, kj) * scale
+            if causal:
+                iq_abs = iq * chunk + jnp.arange(chunk)
+                ik_abs = ik * chunk + jnp.arange(chunk)
+                s = jnp.where(ik_abs[None, :] <= iq_abs[:, None], s, -jnp.inf)
+            m_new = jnp.maximum(m, s.max(-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(-1)
+            acc = acc * corr.transpose(0, 3, 1, 2)[..., None] \
+                + jnp.einsum("bgrqk,bkgh->bqgrh", p, vj)
+            return (m_new, l, acc), None
+
+        if causal:
+            (m, l, acc) = _causal_kv_scan(kv_block, (m0, l0, a0), iq, nk)
+        else:
+            (m, l, acc), _ = jax.lax.scan(kv_block, (m0, l0, a0),
+                                          jnp.arange(nk), unroll=1)
+        out = acc / l.transpose(0, 3, 1, 2)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))
+    out = jnp.moveaxis(blocks, 0, 1)  # (B, nq, c, KV, rep, hd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def _causal_kv_scan(body, init, iq, nk):
+    """Scan kv blocks 0..nk-1 but mask out blocks past the diagonal — the
+    masked blocks contribute exp(-inf)=0, so correctness holds; the bound is
+    static so XLA sees a fixed trip count (FLOPs are counted for all blocks —
+    the §Perf log discusses reclaiming the 2× with a triangular schedule)."""
+    def wrapped(carry, ik):
+        new_carry, _ = body(carry, ik)
+        keep = ik <= iq
+        carry_out = jax.tree.map(
+            lambda new, old: jnp.where(keep, new, old), new_carry, carry)
+        return carry_out, None
+    final, _ = jax.lax.scan(wrapped, init, jnp.arange(nk), unroll=1)
+    return final
+
+
+def attention(p: Params, x: jax.Array, cfg, positions, *,
+              cache: Optional[Params] = None,
+              causal: bool = True,
+              kv_source: Optional[jax.Array] = None,
+              positions3: Optional[jax.Array] = None,
+              wspec: Optional[FixedPointSpec] = None) -> Tuple[jax.Array, Optional[Params]]:
+    """GQA attention. Modes:
+      * train/prefill: cache is None (full seq), returns (out, new_cache-as-None)
+      * prefill w/ cache dict: fills cache, returns (out, cache)
+      * decode: x is (B,1,d), cache holds (B,Smax,KV,hd) + length
+      * cross-attn: kv_source (B,Senc,d) — no rope on kv, cache optional
+    """
+    B, S, _ = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = constrain(dense(p["wq"], x, wspec).reshape(B, S, H, hd),
+                  "attn_heads")
+
+    if cache is not None and "len" not in cache:
+        # pure cross-attention against a precomputed KV cache (whisper decode)
+        out = _sdpa(q, cache["k"], cache["v"], causal=False)
+        return dense(p["wo"], out.reshape(B, S, H * hd), wspec), None
+
+    src = x if kv_source is None else kv_source
+    Skv = src.shape[1]
+    k = constrain(dense(p["wk"], src, wspec).reshape(B, Skv, KV, hd),
+                  "attn_heads")
+    v = constrain(dense(p["wv"], src, wspec).reshape(B, Skv, KV, hd),
+                  "attn_heads")
+    if "q_norm" in p:
+        q = rmsnorm(p["q_norm"], q)
+        k = rmsnorm(p["k_norm"], k)
+    if kv_source is None:  # rope only applies to self-attention
+        if cfg.pos == "rope":
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+        elif cfg.pos == "mrope":
+            q = apply_mrope(q, positions3, cfg.rope_theta)
+            k = apply_mrope(k, positions3, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and kv_source is None:
+        idx = cache["len"]
+        ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                          (0, idx, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                          (0, idx, 0, 0))
+        new_cache = {"k": ck, "v": cv, "len": idx + S}
+        k, v = ck, cv
+        # decode: mask positions beyond current length
+        if S == 1:
+            Smax = k.shape[1]
+            valid = jnp.arange(Smax) < (idx + 1)
+            rep = H // KV
+            qh = q.reshape(B, 1, KV, rep, hd)
+            scores = jnp.einsum("bqgrh,bkgh->bgrqk", qh.astype(jnp.float32),
+                                k.astype(jnp.float32)) / math.sqrt(hd)
+            scores = jnp.where(valid[None, None, None, None, :], scores, -jnp.inf)
+            w = jax.nn.softmax(scores, axis=-1)
+            out = jnp.einsum("bgrqk,bkgh->bqgrh", w, v.astype(jnp.float32))
+            out = out.reshape(B, 1, H, hd).astype(x.dtype)
+            return dense(p["wo"], out.reshape(B, 1, H * hd), wspec), new_cache
+
+    if kv_source is not None and cache is not None:
+        # cross-attention decode: kv precomputed once, stored in cache
+        k = cache["k"]
+        v = cache["v"]
+
+    use_chunked = causal and S > 2 * cfg.prefill_chunk and S % cfg.prefill_chunk == 0
+    if use_chunked:
+        out = _chunked_sdpa(q, k, v, cfg.prefill_chunk, causal=True)
+    else:
+        out = _sdpa(q, k, v, causal=causal and kv_source is None)
+    y = dense(p["wo"], out.reshape(B, S, H * hd), wspec)
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek-style)
+# ---------------------------------------------------------------------------
+def mla_init(key, cfg) -> Params:
+    d, H = cfg.d_model, cfg.n_heads
+    hd, rd = cfg.hd, cfg.mla_rope_dim
+    vhd = cfg.mla_v_head_dim or hd
+    qr, kvr = cfg.mla_q_rank, cfg.mla_kv_rank
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_init(ks[0], d, qr),
+        "q_a_norm": rmsnorm_init(qr),
+        "wq_b": dense_init(ks[1], qr, H * (hd + rd)),
+        "wkv_a": dense_init(ks[2], d, kvr + rd),
+        "kv_a_norm": rmsnorm_init(kvr),
+        "wkv_b": dense_init(ks[3], kvr, H * (hd + vhd)),
+        "wo": dense_init(ks[4], H * vhd, d),
+    }
+
+
+def mla_attention(p: Params, x: jax.Array, cfg, positions, *,
+                  cache: Optional[Params] = None,
+                  wspec=None) -> Tuple[jax.Array, Optional[Params]]:
+    """MLA with the compressed-KV cache (c_kv + rope-k only — the memory win).
+
+    Prefill uses the expanded form (compute-optimal); decode uses the
+    absorbed form: q is projected into latent space so attention runs
+    directly against the (B, S, kv_rank) cache — no per-step KV expansion.
+    """
+    B, S, d = x.shape
+    H, hd, rd = cfg.n_heads, cfg.hd, cfg.mla_rope_dim
+    vhd = cfg.mla_v_head_dim or hd
+    kvr = cfg.mla_kv_rank
+    scale = 1.0 / math.sqrt(hd + rd)
+
+    q = dense(p["wq_b"], rmsnorm(p["q_a_norm"], dense(p["wq_a"], x, wspec)),
+              wspec).reshape(B, S, H, hd + rd)
+    q_nope, q_pe = q[..., :hd], q[..., hd:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    kv_a = dense(p["wkv_a"], x, wspec)                  # (B,S,kvr+rd)
+    c_kv = rmsnorm(p["kv_a_norm"], kv_a[..., :kvr])     # compressed latent
+    k_pe = apply_rope(kv_a[..., kvr:].reshape(B, S, 1, rd), positions,
+                      cfg.rope_theta)                   # shared across heads
+
+    w_kv_b = p["wkv_b"]["w"].reshape(kvr, H, hd + vhd)
+    w_uk, w_uv = w_kv_b[..., :hd], w_kv_b[..., hd:]
+
+    if cache is not None and S == 1:  # absorbed decode
+        idx = cache["len"]
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                          c_kv.astype(cache["c_kv"].dtype),
+                                          (0, idx, 0))
+        cp = jax.lax.dynamic_update_slice(cache["k_pe"],
+                                          k_pe[:, :, 0].astype(cache["k_pe"].dtype),
+                                          (0, idx, 0))
+        new_cache = {"c_kv": cc, "k_pe": cp, "len": idx + 1}
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32),
+                           w_uk.astype(jnp.float32))    # absorb W_uk into q
+        s_nope = jnp.einsum("bqhr,bkr->bhqk", q_lat, cc.astype(jnp.float32))
+        s_pe = jnp.einsum("bqhd,bkd->bhqk", q_pe.astype(jnp.float32),
+                          cp.astype(jnp.float32))
+        s = (s_nope + s_pe) * scale
+        valid = jnp.arange(cc.shape[1]) < (idx + 1)
+        s = jnp.where(valid[None, None, None, :], s, -jnp.inf)
+        w = jax.nn.softmax(s, axis=-1)
+        ctx = jnp.einsum("bhqk,bkr->bqhr", w, cc.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhv->bqhv", ctx, w_uv.astype(jnp.float32))
+        y = dense(p["wo"], out.reshape(B, 1, H * vhd).astype(x.dtype), wspec)
+        return y, new_cache
+
+    # expanded prefill/train path
+    k_nope = jnp.einsum("bkr,rhd->bkhd", c_kv.astype(jnp.float32),
+                        w_uk.astype(jnp.float32)).astype(x.dtype)
+    v = jnp.einsum("bkr,rhv->bkhv", c_kv.astype(jnp.float32),
+                   w_uv.astype(jnp.float32)).astype(x.dtype)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_pe, (B, S, H, rd))], -1)
+    qfull = jnp.concatenate([q_nope, q_pe], -1)
+    if S > 2 * cfg.prefill_chunk and S % cfg.prefill_chunk == 0:
+        out = _chunked_sdpa(qfull, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                                  (0, hd + rd - vhd))),
+                            cfg.prefill_chunk)[..., :vhd]
+    else:
+        out = _sdpa(qfull, k, jnp.pad(v, ((0, 0), (0, 0), (0, 0),
+                                          (0, hd + rd - vhd))),
+                    causal=True)[..., :vhd]
+    y = dense(p["wo"], out.reshape(B, S, H * vhd), wspec)
+    new_cache = None
+    if cache is not None:  # prefill filling the compressed cache
+        idx = cache["len"]
+        cc = jax.lax.dynamic_update_slice(cache["c_kv"],
+                                          c_kv.astype(cache["c_kv"].dtype),
+                                          (0, idx, 0))
+        cp = jax.lax.dynamic_update_slice(cache["k_pe"],
+                                          k_pe[:, :, 0].astype(cache["k_pe"].dtype),
+                                          (0, idx, 0))
+        new_cache = {"c_kv": cc, "k_pe": cp, "len": idx + S}
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+def mlp_init(key, d: int, f: int, act: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"w_gate": dense_init(ks[0], d, f),
+                "w_up": dense_init(ks[1], d, f),
+                "w_down": dense_init(ks[2], f, d)}
+    return {"w_up": dense_init(ks[0], d, f), "w_down": dense_init(ks[1], f, d)}
+
+
+def mlp(p: Params, x: jax.Array, act: str = "swiglu", wspec=None,
+        aspec=None) -> jax.Array:
+    if act == "swiglu":
+        h = jax.nn.silu(dense(p["w_gate"], x, wspec)) * dense(p["w_up"], x, wspec)
+    else:
+        h = jax.nn.gelu(dense(p["w_up"], x, wspec))
+    h = fake_quant(h, aspec)
+    return dense(p["w_down"], h, wspec)
+
+
+# ---------------------------------------------------------------------------
+# MoE (top-k, capacity-based dropping dispatch; EP-shardable)
+# ---------------------------------------------------------------------------
+def moe_init(key, cfg) -> Params:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe_experts
+    ks = jax.random.split(key, 5)
+    s = 1.0 / math.sqrt(d)
+    p = {"router": dense_init(ks[0], d, E),
+         "w_gate": jax.random.uniform(ks[1], (E, d, f), jnp.float32, -s, s),
+         "w_up": jax.random.uniform(ks[2], (E, d, f), jnp.float32, -s, s),
+         "w_down": jax.random.uniform(ks[3], (E, f, d), jnp.float32,
+                                      -1.0 / math.sqrt(f), 1.0 / math.sqrt(f))}
+    if cfg.moe_dense_residual:
+        p["dense_mlp"] = mlp_init(ks[4], d, cfg.d_ff, cfg.act)
+    return p
+
+
+def moe(p: Params, x: jax.Array, cfg, wspec=None, aspec=None
+        ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (output, aux_load_balance_loss).
+
+    Sort-free capacity dispatch: each (token, choice) entry gets a rank
+    within its expert via a one-hot cumulative sum; entries past capacity
+    drop (standard Switch behaviour).  The (E, C, d) buffers shard over the
+    expert axis (see dist/sharding.py) → the scatter/gather pair lowers to
+    the EP all-to-all.
+    """
+    B, S, d = x.shape
+    E, k = cfg.moe_experts, cfg.moe_top_k
+    T = B * S
+    C = max(int(cfg.moe_capacity_factor * T * k / E), 1)
+    flat = x.reshape(T, d)
+
+    logits = dense(p["router"], flat, None, dtype=jnp.float32)       # (T, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, idx = jax.lax.top_k(probs, k)                          # (T, k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # load-balance aux (Switch): E * Σ_e frac_tokens_e * frac_prob_e
+    me = jnp.mean(jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(me * ce)
+
+    ids = idx.reshape(T * k)
+    one = jax.nn.one_hot(ids, E, dtype=jnp.int32)                     # (Tk, E)
+    rank = jnp.cumsum(one, axis=0) - one                              # pre-count
+    pos = jnp.sum(rank * one, axis=-1)                                # (Tk,)
+    keep = pos < C
+    pos_c = jnp.where(keep, pos, C)                                   # C = overflow row
+
+    buf = jnp.zeros((E, C + 1, d), x.dtype)
+    tok_idx = jnp.repeat(jnp.arange(T), k)
+    buf = buf.at[ids, pos_c].set(flat[tok_idx] *
+                                 keep[:, None].astype(x.dtype))
+    buf = constrain(buf[:, :C], "moe_dispatch")   # EP all-to-all boundary
+
+    wg = fake_quant(p["w_gate"], wspec) if wspec else p["w_gate"]
+    wu = fake_quant(p["w_up"], wspec) if wspec else p["w_up"]
+    wd = fake_quant(p["w_down"], wspec) if wspec else p["w_down"]
+    cd = x.dtype
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg.astype(cd))) \
+        * jnp.einsum("ecd,edf->ecf", buf, wu.astype(cd))
+    h = fake_quant(h, aspec)
+    out_buf = jnp.einsum("ecf,efd->ecd", h, wd.astype(cd))
+    out_buf = jnp.concatenate([out_buf, jnp.zeros((E, 1, d), cd)], axis=1)
+
+    gathered = out_buf[ids, pos_c]                                    # (Tk, d)
+    weighted = gathered * (gate_vals.reshape(T * k, 1).astype(cd)
+                           * keep[:, None].astype(cd))
+    y = jnp.sum(weighted.reshape(T, k, d), axis=1)
+
+    if "dense_mlp" in p:  # arctic's parallel dense residual branch
+        y = y + mlp(p["dense_mlp"], flat, cfg.act, wspec, aspec)
+    return y.reshape(B, S, d), aux
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 (SSD — state-space duality, chunked)
+# ---------------------------------------------------------------------------
+def mamba_init(key, cfg, d_model: Optional[int] = None) -> Params:
+    d = d_model or cfg.d_model
+    di, N, G = cfg.ssm_expand * d, cfg.ssm_state, cfg.ssm_groups
+    nh = di // cfg.ssm_head_dim
+    ks = jax.random.split(key, 4)
+    conv_dim = di + 2 * G * N
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * G * N + nh),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "gnorm": rmsnorm_init(di),
+        "out_proj": dense_init(ks[2], di, d),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 state: Optional[jax.Array] = None):
+    """Depthwise causal conv1d. x (B,S,C), w (K,C). Returns (y, new_state)
+    where state carries the last K-1 inputs for decode."""
+    K = w.shape[0]
+    if state is None:
+        pad = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    else:
+        pad = state.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K)) + b
+    new_state = xp[:, -(K - 1):] if K > 1 else None
+    return jax.nn.silu(y), new_state
+
+
+def _segsum(a_log: jax.Array) -> jax.Array:
+    """L[i,j] = exp(Σ_{j<m<=i} a_log_m) lower-triangular decay matrix.
+    a_log: (..., Q) -> (..., Q, Q)."""
+    Q = a_log.shape[-1]
+    cs = jnp.cumsum(a_log, axis=-1)
+    dif = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool), 0)
+    # mask BEFORE exp: the upper triangle holds large positive sums whose
+    # exp overflows; 0·inf in the VJP would poison the whole gradient.
+    return jnp.exp(jnp.where(mask, dif, -jnp.inf))
+
+
+def mamba_apply(p: Params, u: jax.Array, cfg, *, state=None, wspec=None
+                ) -> Tuple[jax.Array, Optional[Params]]:
+    """Mamba2 SSD block. u: (B,S,d).
+
+    Train/prefill: chunked SSD (quadratic-within-chunk + inter-chunk state
+    recurrence).  Decode (S==1 with state): O(1) recurrent update — this is
+    why `long_500k` is an SSM-family cell.
+    """
+    B, S, d = u.shape
+    di = cfg.ssm_expand * d
+    N, G, P = cfg.ssm_state, cfg.ssm_groups, cfg.ssm_head_dim
+    nh = di // P
+    proj = dense(p["in_proj"], u, wspec)
+    z, xBC, dt = jnp.split(proj, [di, 2 * di + 2 * G * N], axis=-1)
+
+    conv_state = None if state is None else state["conv"]
+    xBC, new_conv = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    x, B_, C_ = jnp.split(xBC, [di, di + G * N], axis=-1)
+    x = x.reshape(B, S, nh, P)
+    B_ = B_.reshape(B, S, G, N)
+    C_ = C_.reshape(B, S, G, N)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                                         # (nh,)
+    a_log = (dt * A).astype(jnp.float32)                             # (B,S,nh)
+    xdt = x.astype(jnp.float32) * dt[..., None]                      # (B,S,nh,P)
+    rep = nh // G
+
+    if S == 1 and state is not None:  # -------- decode
+        ssm = state["ssm"]                                           # (B,nh,P,N)
+        Bg = jnp.repeat(B_[:, 0], rep, axis=1)                       # (B,nh,N)
+        Cg = jnp.repeat(C_[:, 0], rep, axis=1)
+        ssm = ssm * jnp.exp(a_log[:, 0])[..., None, None] \
+            + xdt[:, 0][..., None] * Bg[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", ssm, Cg)
+        y = y + p["D"][None, :, None] * x[:, 0].astype(jnp.float32)
+        y = y.reshape(B, 1, di).astype(u.dtype)
+        y = rmsnorm(p["gnorm"], y * jax.nn.silu(z))
+        return dense(p["out_proj"], y, wspec), {"conv": new_conv, "ssm": ssm}
+
+    # -------- chunked SSD (train / prefill)
+    Q = min(cfg.ssm_chunk, S)
+    assert S % Q == 0, f"seq {S} must divide ssm_chunk {Q}"
+    nc = S // Q
+    xdt_c = xdt.reshape(B, nc, Q, nh, P)
+    B_c = B_.reshape(B, nc, Q, G, N)
+    C_c = C_.reshape(B, nc, Q, G, N)
+    al_c = a_log.reshape(B, nc, Q, nh)
+
+    L = _segsum(al_c.transpose(0, 1, 3, 2))                          # (B,nc,nh,Q,Q)
+    Bh = jnp.repeat(B_c, rep, axis=3)                                # (B,nc,Q,nh,N)
+    Ch = jnp.repeat(C_c, rep, axis=3)
+    att = jnp.einsum("bcqhn,bckhn->bchqk", Ch, Bh) * L
+    Y_diag = jnp.einsum("bchqk,bckhp->bcqhp", att, xdt_c)
+
+    seg_end = jnp.exp(al_c.sum(2, keepdims=True) - jnp.cumsum(al_c, 2))
+    S_chunk = jnp.einsum("bcqhn,bcqhp,bcqh->bchpn", Bh, xdt_c, seg_end)
+    a_chunk = jnp.exp(al_c.sum(2))                                   # (B,nc,nh)
+
+    init = jnp.zeros((B, nh, P, N), jnp.float32) if state is None \
+        else state["ssm"]
+
+    def chunk_step(s, inp):
+        sc, ac = inp
+        s_new = s * ac[..., None, None] + sc
+        return s_new, s
+
+    (final_state, prev_states) = jax.lax.scan(
+        chunk_step, init,
+        (jnp.moveaxis(S_chunk, 1, 0), jnp.moveaxis(a_chunk, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                    # (B,nc,nh,P,N)
+
+    decay_in = jnp.exp(jnp.cumsum(al_c, 2))                          # (B,nc,Q,nh)
+    Y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Ch, prev_states, decay_in)
+
+    y = (Y_diag + Y_off).reshape(B, S, nh, P)
+    y = y + p["D"][None, None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(B, S, di).astype(u.dtype)
+    y = rmsnorm(p["gnorm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y, wspec)
+    new_state = None
+    if state is not None:
+        new_state = {"conv": new_conv, "ssm": final_state}
+    return out, new_state

@@ -1,0 +1,423 @@
+"""Unified decoder-LM covering the dense / moe / mla / ssm / hybrid / vlm
+families via :class:`~repro.models.common.ArchConfig` dispatch.
+
+Entry points (all pure functions of (params, batch)):
+
+* ``init_params(key, cfg)``        — parameter pytree (stacked per-layer
+  arrays so the forward pass is a ``lax.scan`` over layers).
+* ``forward(params, batch, cfg)``  — full-sequence logits (training).
+* ``loss_fn(params, batch, cfg)``  — token CE (+ MoE aux), f32.
+* ``prefill(params, batch, cfg)``  — full forward, last-position logits only
+  (the inference-prefill workload).
+* ``init_cache(cfg, B, S, dtype)`` — decode cache specs (KV / MLA-latent /
+  SSM state, per family).
+* ``decode_step(params, tokens, cache, cfg)`` — one-token serve step.
+
+Sharding is annotated by the launcher (dist/sharding.py) on the *param tree
+paths*; this module stays mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.dist.act_sharding import constrain
+from repro.models import layers as L
+from repro.models.common import ArchConfig
+
+Params = Dict[str, Any]
+
+
+def _wspec(cfg: ArchConfig):
+    return cfg.quant.weight if cfg.quant else None
+
+
+def _aspec(cfg: ArchConfig):
+    return cfg.quant.act if cfg.quant else None
+
+
+def _is_shared_slot(cfg: ArchConfig, i: int) -> bool:
+    return cfg.hybrid_period > 0 and (i % cfg.hybrid_period == cfg.hybrid_period - 1)
+
+
+def _layer_kinds(cfg: ArchConfig):
+    """Per-slot kind list: 'attn' (attn+mlp/moe block), 'mamba', 'shared'."""
+    if cfg.family == "ssm":
+        return ["mamba"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        return ["shared" if _is_shared_slot(cfg, i) else "mamba"
+                for i in range(cfg.n_layers)]
+    return ["attn"] * cfg.n_layers
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+def _attn_block_init(key, cfg: ArchConfig) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p = {"ln1": L.rmsnorm_init(cfg.d_model), "ln2": L.rmsnorm_init(cfg.d_model)}
+    if cfg.attention == "mla":
+        p["attn"] = L.mla_init(k1, cfg)
+    else:
+        p["attn"] = L.attn_init(k1, cfg)
+    if cfg.moe_experts:
+        p["moe"] = L.moe_init(k2, cfg)
+    else:
+        p["mlp"] = L.mlp_init(k2, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def _stacked(fn, key, n: int):
+    """Init `n` copies of a block and stack leaves along axis 0 (scan form)."""
+    keys = jax.random.split(key, n)
+    trees = [fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(key: jax.Array, cfg: ArchConfig) -> Params:
+    keys = jax.random.split(key, 8)
+    p: Params = {
+        "embed": jax.random.normal(keys[0], (cfg.vocab_padded, cfg.d_model),
+                                   jnp.float32) * 0.02,
+        "final_norm": L.rmsnorm_init(cfg.d_model),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = L.dense_init(keys[1], cfg.d_model, cfg.vocab_padded)
+
+    kinds = _layer_kinds(cfg)
+    n_attn = kinds.count("attn")
+    n_mamba = kinds.count("mamba")
+    if n_attn:
+        p["blocks"] = _stacked(lambda k: _attn_block_init(k, cfg), keys[2], n_attn)
+    if n_mamba:
+        p["mamba_blocks"] = _stacked(
+            lambda k: {"ln": L.rmsnorm_init(cfg.d_model),
+                       "mamba": L.mamba_init(k, cfg)}, keys[3], n_mamba)
+    if cfg.family == "hybrid":  # ONE shared attention+mlp block (zamba2)
+        p["shared_block"] = _attn_block_init(keys[4], cfg)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+def _attn_block(p: Params, x, cfg: ArchConfig, positions, positions3,
+                cache=None):
+    ws, as_ = _wspec(cfg), _aspec(cfg)
+    x = constrain(x, "residual")
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.attention == "mla":
+        a, new_cache = L.mla_attention(p["attn"], h, cfg, positions,
+                                       cache=cache, wspec=ws)
+    else:
+        a, new_cache = L.attention(p["attn"], h, cfg, positions,
+                                   cache=cache, positions3=positions3,
+                                   wspec=ws)
+    x = x + checkpoint_name(a, "attn_out")
+    h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if cfg.moe_experts:
+        m, aux = L.moe(p["moe"], h, cfg, ws, as_)
+    else:
+        m, aux = L.mlp(p["mlp"], h, cfg.act, ws, as_), jnp.zeros((), jnp.float32)
+    from repro.core.quant import fake_quant
+    return x + checkpoint_name(fake_quant(m, as_), "mlp_out"), aux, new_cache
+
+
+def _mamba_block(p: Params, x, cfg: ArchConfig, state=None):
+    x = constrain(x, "residual")
+    h = L.rmsnorm(p["ln"], x, cfg.norm_eps)
+    y, new_state = L.mamba_apply(p["mamba"], h, cfg, state=state,
+                                 wspec=_wspec(cfg))
+    return x + y, new_state
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head
+# ---------------------------------------------------------------------------
+def _embed_tokens(p: Params, batch: Dict[str, jax.Array], cfg: ArchConfig):
+    tokens = batch["tokens"]
+    x = jnp.take(p["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # precomputed vision-patch embeddings prefix (frontend is a stub)
+        x = jnp.concatenate(
+            [batch["patch_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def _positions_for(batch, cfg, S, B):
+    if "positions" in batch:
+        return batch["positions"]
+    return jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+
+def _positions3_for(batch, cfg, positions):
+    """M-RoPE position streams; text-only default t==h==w (== plain RoPE)."""
+    if cfg.pos != "mrope":
+        return batch.get("positions3")
+    if "positions3" in batch:
+        return batch["positions3"]
+    return jnp.broadcast_to(positions[None], (3, *positions.shape))
+
+
+def _head(p: Params, x, cfg: ArchConfig):
+    if cfg.tie_embeddings:
+        logits = jnp.matmul(x, p["embed"].T.astype(x.dtype))
+    else:
+        logits = L.dense(p["lm_head"], x, _wspec(cfg), dtype=x.dtype)
+    return constrain(logits, "logits")
+
+
+# ---------------------------------------------------------------------------
+# Forward (train) — scan over stacked homogeneous blocks
+# ---------------------------------------------------------------------------
+def _remat(fn, cfg: ArchConfig):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "tp_outputs":
+        pol = jax.checkpoint_policies.save_only_these_names(
+            "attn_out", "mlp_out")
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def forward(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits, moe_aux_loss)."""
+    x = _embed_tokens(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = _positions_for(batch, cfg, S, B)
+    positions3 = _positions3_for(batch, cfg, positions)
+
+    aux_total = jnp.zeros((), jnp.float32)
+    kinds = _layer_kinds(cfg)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(x, bp):
+            y, aux, _ = _attn_block(bp, x, cfg, positions, positions3)
+            return y, aux
+        body_fn = _remat(body, cfg)
+        if cfg.scan_layers:
+            x, auxes = jax.lax.scan(body_fn, x, params["blocks"])
+            aux_total = auxes.sum()
+        else:
+            for i in range(cfg.n_layers):
+                bp = jax.tree.map(lambda a: a[i], params["blocks"])
+                x, aux = body_fn(x, bp)
+                aux_total += aux
+    elif cfg.family == "ssm":
+        def mbody(x, bp):
+            y, _ = _mamba_block(bp, x, cfg)
+            return y, None
+        mbody_fn = _remat(mbody, cfg)
+        x, _ = jax.lax.scan(mbody_fn, x, params["mamba_blocks"])
+    elif cfg.family == "hybrid":
+        x, aux_total = _hybrid_forward(params, x, cfg, positions, kinds)
+    else:
+        raise ValueError(f"unknown family {cfg.family}")
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(params, x, cfg), aux_total
+
+
+def _hybrid_forward(params, x, cfg, positions, kinds):
+    """zamba2 layout: runs of mamba blocks punctuated by ONE shared
+    attn+mlp block (fresh invocation each time, same weights)."""
+    aux = jnp.zeros((), jnp.float32)
+    n_mamba = kinds.count("mamba")
+    period = cfg.hybrid_period
+    n_shared = kinds.count("shared")
+    run = period - 1  # mamba blocks between shared invocations
+
+    def mbody(x, bp):
+        y, _ = _mamba_block(bp, x, cfg)
+        return y, None
+    mbody_fn = jax.checkpoint(mbody) if cfg.remat else mbody
+
+    def sbody(x):
+        y, a, _ = _attn_block(params["shared_block"], x, cfg, positions, None)
+        return y, a
+    sbody_fn = jax.checkpoint(sbody) if cfg.remat else sbody
+
+    mparams = params["mamba_blocks"]
+    consumed = 0
+    for s in range(n_shared):
+        grp = jax.tree.map(lambda a: a[consumed:consumed + run], mparams)
+        x, _ = jax.lax.scan(mbody_fn, x, grp)
+        consumed += run
+        x, a = sbody_fn(x)
+        aux += a
+    if consumed < n_mamba:  # trailing mamba layers
+        grp = jax.tree.map(lambda a: a[consumed:], mparams)
+        x, _ = jax.lax.scan(mbody_fn, x, grp)
+    return x, aux
+
+
+def loss_fn(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig
+            ) -> jax.Array:
+    logits, aux = forward(params, batch, cfg)
+    labels = batch["labels"]
+    if cfg.family == "vlm" and "patch_embeds" in batch:
+        # vision prefix carries no next-token loss
+        logits = logits[:, batch["patch_embeds"].shape[1]:]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                               labels[..., None], axis=-1)[..., 0]
+    ce = (lse - gold).mean()
+    return ce + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + one-token decode
+# ---------------------------------------------------------------------------
+def prefill(params: Params, batch: Dict[str, jax.Array], cfg: ArchConfig
+            ) -> jax.Array:
+    """Full-sequence forward; emits ONLY last-position logits (B, V)."""
+    x = _embed_tokens(params, batch, cfg)
+    B, S, _ = x.shape
+    positions = _positions_for(batch, cfg, S, B)
+    positions3 = _positions3_for(batch, cfg, positions)
+    kinds = _layer_kinds(cfg)
+
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(x, bp):
+            y, _, _ = _attn_block(bp, x, cfg, positions, positions3)
+            return y, None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["blocks"])
+    elif cfg.family == "ssm":
+        def mbody(x, bp):
+            y, _ = _mamba_block(bp, x, cfg)
+            return y, None
+        x, _ = jax.lax.scan(jax.checkpoint(mbody) if cfg.remat else mbody,
+                            x, params["mamba_blocks"])
+    elif cfg.family == "hybrid":
+        x, _ = _hybrid_forward(params, x, cfg, positions, kinds)
+    x = L.rmsnorm(params["final_norm"], x[:, -1:], cfg.norm_eps)
+    return _head(params, x, cfg)[:, 0]
+
+
+def init_cache(cfg: ArchConfig, B: int, max_len: int, dtype=jnp.bfloat16
+               ) -> Params:
+    """Decode-cache pytree. Leaves have a leading layer axis so decode_step
+    scans over (block-params, cache-slice) pairs."""
+    kinds = _layer_kinds(cfg)
+    n_attn = kinds.count("attn")
+    n_mamba = kinds.count("mamba")
+    n_shared = kinds.count("shared")
+    cache: Params = {}
+    hd = cfg.hd
+
+    def kv(n):
+        return {"k": jnp.zeros((n, B, max_len, cfg.n_kv_heads, hd), dtype),
+                "v": jnp.zeros((n, B, max_len, cfg.n_kv_heads, hd), dtype),
+                "len": jnp.zeros((n,), jnp.int32)}
+
+    if n_attn:
+        if cfg.attention == "mla":
+            cache["attn"] = {
+                "c_kv": jnp.zeros((n_attn, B, max_len, cfg.mla_kv_rank), dtype),
+                "k_pe": jnp.zeros((n_attn, B, max_len, cfg.mla_rope_dim), dtype),
+                "len": jnp.zeros((n_attn,), jnp.int32)}
+        else:
+            cache["attn"] = kv(n_attn)
+    if n_mamba:
+        di, N = cfg.d_inner, cfg.ssm_state
+        nh = di // cfg.ssm_head_dim
+        conv_dim = di + 2 * cfg.ssm_groups * N
+        cache["mamba"] = {
+            "conv": jnp.zeros((n_mamba, B, cfg.ssm_conv - 1, conv_dim), dtype),
+            "ssm": jnp.zeros((n_mamba, B, nh, cfg.ssm_head_dim, N), jnp.float32)}
+    if n_shared:
+        cache["shared"] = kv(n_shared)
+    return cache
+
+
+def decode_step(params: Params, tokens: jax.Array, cache: Params,
+                cfg: ArchConfig, positions: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Params]:
+    """One new token for every sequence: tokens (B, 1) -> logits (B, V)."""
+    B = tokens.shape[0]
+    x = jnp.take(params["embed"], tokens, axis=0).astype(
+        jnp.dtype(cfg.compute_dtype))
+    if positions is None:
+        ref = cache.get("attn") or cache.get("shared")
+        pos_scalar = ref["len"][0] if ref is not None else 0
+        positions = jnp.full((B, 1), pos_scalar, jnp.int32)
+    kinds = _layer_kinds(cfg)
+    positions3 = _positions3_for({}, cfg, positions)
+
+    new_cache = dict(cache)
+    if cfg.family in ("dense", "moe", "vlm", "audio"):
+        def body(x, scan_in):
+            bp, c = scan_in
+            y, _, nc = _attn_block(bp, x, cfg, positions, positions3, cache=c)
+            return y, nc
+        x, upd = jax.lax.scan(body, x, (params["blocks"], _split_len(cache["attn"])))
+        new_cache["attn"] = _merge_len(upd)
+    elif cfg.family == "ssm":
+        def mbody(x, scan_in):
+            bp, st = scan_in
+            y, ns = _mamba_block(bp, x, cfg, state=st)
+            return y, ns
+        x, upd = jax.lax.scan(mbody, x, (params["mamba_blocks"], cache["mamba"]))
+        new_cache["mamba"] = upd
+    elif cfg.family == "hybrid":
+        x, new_cache = _hybrid_decode(params, x, cache, cfg, positions, kinds)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return _head(params, x, cfg)[:, 0], new_cache
+
+
+def _split_len(c):
+    """Per-layer 'len' scalars ride along the scan axis already."""
+    return c
+
+
+def _merge_len(c):
+    return c
+
+
+def _hybrid_decode(params, x, cache, cfg, positions, kinds):
+    n_shared = kinds.count("shared")
+    run = cfg.hybrid_period - 1
+    n_mamba = kinds.count("mamba")
+    new_cache = dict(cache)
+
+    def mbody(x, scan_in):
+        bp, st = scan_in
+        y, ns = _mamba_block(bp, x, cfg, state=st)
+        return y, ns
+
+    mparams = params["mamba_blocks"]
+    mcache = cache["mamba"]
+    upd_mamba = []
+    consumed = 0
+    upd_shared = []
+    for s in range(n_shared):
+        grp_p = jax.tree.map(lambda a: a[consumed:consumed + run], mparams)
+        grp_c = jax.tree.map(lambda a: a[consumed:consumed + run], mcache)
+        x, uc = jax.lax.scan(mbody, x, (grp_p, grp_c))
+        upd_mamba.append(uc)
+        consumed += run
+        sc = jax.tree.map(lambda a: a[s], cache["shared"])
+        y, _, nsc = _attn_block(params["shared_block"], x, cfg, positions,
+                                None, cache=sc)
+        x = y
+        upd_shared.append(nsc)
+    if consumed < n_mamba:
+        grp_p = jax.tree.map(lambda a: a[consumed:], mparams)
+        grp_c = jax.tree.map(lambda a: a[consumed:], mcache)
+        x, uc = jax.lax.scan(mbody, x, (grp_p, grp_c))
+        upd_mamba.append(uc)
+    new_cache["mamba"] = jax.tree.map(
+        lambda *xs: jnp.concatenate(xs, axis=0), *upd_mamba)
+    new_cache["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
+                                       *upd_shared)
+    return x, new_cache

@@ -1,0 +1,85 @@
+"""End-to-end FSL behaviour (paper's system claim): pretraining a quantized
+backbone on base classes transfers to novel-class episodes; NCM invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.quant import FixedPointSpec, QuantConfig
+from repro.data.synthetic import SyntheticImages
+from repro.fsl import ncm
+from repro.fsl.pipeline import FSLPipeline, evaluate_episodes, pretrain_backbone
+
+
+def test_ncm_perfect_separation():
+    f_sup = jnp.asarray([[1.0, 0.0], [0.9, 0.1], [0.0, 1.0], [0.1, 0.9]])
+    y_sup = jnp.asarray([0, 0, 1, 1])
+    f_qry = jnp.asarray([[0.8, 0.05], [0.0, 0.7]])
+    y_qry = jnp.asarray([0, 1])
+    acc = ncm.ncm_accuracy(f_qry, y_qry, f_sup, y_sup, 2)
+    assert float(acc) == 1.0
+
+
+def test_ncm_scale_invariance():
+    """L2 normalization makes NCM invariant to feature scaling — why the
+    GAP 1/(H·W) Mul can fold into the NCM head (paper Sec. III-D)."""
+    rng = np.random.default_rng(0)
+    f_sup = jnp.asarray(rng.normal(size=(20, 8)).astype(np.float32))
+    y_sup = jnp.asarray(rng.integers(0, 4, 20))
+    f_qry = jnp.asarray(rng.normal(size=(12, 8)).astype(np.float32))
+    m1 = ncm.ncm_classify(f_qry, ncm.class_means(f_sup, y_sup, 4))
+    m2 = ncm.ncm_classify(f_qry * 37.0, ncm.class_means(f_sup * 0.01, y_sup, 4))
+    np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
+
+
+@pytest.mark.slow
+def test_fsl_pretraining_improves_over_random():
+    """Base-class pretraining must transfer to held-out novel classes."""
+    data = SyntheticImages(n_base=12, n_novel=6, seed=3)
+    pipe = FSLPipeline(width=8, qcfg=QuantConfig.paper_w6a4(),
+                       easy_augment=False)
+    import jax.random as jr
+    from repro.models import resnet9
+    rand_params = resnet9.init_params(jr.PRNGKey(9), 8)
+    acc_rand, _ = evaluate_episodes(rand_params, data, pipe, n_episodes=6)
+    out = pretrain_backbone(data, pipe, steps=60, batch=32)
+    acc_trained, _ = evaluate_episodes(out["params"], data, pipe, n_episodes=6)
+    assert out["losses"][-1] < out["losses"][0], "pretraining loss must drop"
+    assert acc_trained >= acc_rand - 0.05, \
+        f"training hurt transfer: {acc_rand} -> {acc_trained}"
+    assert acc_trained > 0.4, f"way above 5-way chance expected: {acc_trained}"
+
+
+def test_serving_quantization_consistency():
+    """w8 serving logits track bf16 logits (the numerics contract that lets
+    the bit-width lever ship without retraining)."""
+    from repro.launch.steps import quantize_tree_for_serving
+    from repro.models import lm
+    from repro.models.common import get_config
+    from repro.models.testing import reduce_config
+
+    cfg = reduce_config(get_config("qwen2.5-3b"))
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    q8 = quantize_tree_for_serving(params, 8)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 12), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": toks}
+    ref, _ = lm.forward(params, batch, cfg)
+    got, _ = lm.forward(q8, batch, cfg)
+    # top-1 agreement on nearly all positions
+    agree = (ref.argmax(-1) == got.argmax(-1)).mean()
+    assert float(agree) > 0.9, f"w8 top-1 agreement too low: {agree}"
+
+
+def test_w4_packing_roundtrip_in_tree():
+    from repro.launch.steps import quantize_tree_for_serving
+    from repro.models import layers as L
+    p = L.dense_init(jax.random.PRNGKey(0), 32, 16)
+    q4 = quantize_tree_for_serving({"lin": p}, 4)["lin"]
+    assert q4["w_codes"].shape == (32, 8)        # packed pairs
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+    y4 = L.dense(q4, x)
+    yref = L.dense(p, x)
+    err = float(jnp.abs(y4.astype(jnp.float32) - yref.astype(jnp.float32)).mean())
+    scale = float(jnp.abs(yref.astype(jnp.float32)).mean())
+    assert err < 0.25 * scale, f"w4 too lossy: {err} vs {scale}"

@@ -1,0 +1,111 @@
+"""Properties of the fixed-point quantizer — the paper's numerics contract."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+
+SPECS = [
+    quant.FixedPointSpec(6, 5, signed=True),    # paper conv 6b (1.5)
+    quant.FixedPointSpec(4, 2, signed=False),   # paper act 4b (2.2)
+    quant.FixedPointSpec(16, 8, signed=True),   # conventional 16b
+    quant.FixedPointSpec(8, 4, signed=True),
+    quant.FixedPointSpec(5, 3, signed=True),
+    quant.FixedPointSpec(2, 0, signed=False),
+]
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_roundtrip_idempotent(spec):
+    """qdq is a projection: applying it twice == once."""
+    x = np.linspace(spec.min_value * 2, spec.max_value * 2, 1001, dtype=np.float32)
+    once = quant.dequantize(quant.quantize(x, spec), spec)
+    twice = quant.dequantize(quant.quantize(once, spec), spec)
+    np.testing.assert_array_equal(once, twice)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_grid_points_exact(spec):
+    """Every representable grid point survives quantization unchanged."""
+    qs = np.arange(spec.qmin, spec.qmax + 1, dtype=np.int32)
+    vals = qs * spec.scale
+    np.testing.assert_array_equal(np.asarray(quant.quantize(vals, spec)), qs)
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_saturation(spec):
+    big = np.array([1e9, -1e9], dtype=np.float32)
+    q = np.asarray(quant.quantize(big, spec))
+    assert q[0] == spec.qmax
+    assert q[1] == spec.qmin
+
+
+@given(st.integers(2, 12), st.integers(0, 8), st.booleans(),
+       st.lists(st.floats(-100, 100, width=32), min_size=1, max_size=64))
+@settings(max_examples=50, deadline=None)
+def test_multithreshold_equals_quantize(total, frac, signed, xs):
+    """The paper's MultiThreshold lowering is EXACTLY the quantizer."""
+    if signed and total < 2:
+        total = 2
+    spec = quant.FixedPointSpec(total, frac, signed=signed)
+    x = np.asarray(xs, dtype=np.float32)
+    t = jnp.asarray(quant.thresholds_for(spec))
+    counts = quant.multithreshold(jnp.asarray(x), t, out_base=spec.qmin)
+    np.testing.assert_array_equal(np.asarray(counts, np.int32),
+                                  np.asarray(quant.quantize(x, spec)))
+
+
+@pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.describe())
+def test_multithreshold_exact_midpoints(spec):
+    """Round-half-even tie-breaking at EXACT grid midpoints — the case that
+    bit off-by-one'd the ResNet-9 export before the odd/even nudge fix."""
+    qs = np.arange(spec.qmin + 1, spec.qmax + 1, dtype=np.float64)
+    mids = ((qs - 0.5) * spec.scale).astype(np.float32)
+    t = jnp.asarray(quant.thresholds_for(spec))
+    counts = quant.multithreshold(jnp.asarray(mids), t, out_base=spec.qmin)
+    np.testing.assert_array_equal(np.asarray(counts, np.int32),
+                                  np.asarray(quant.quantize(mids, spec)))
+
+
+def test_fake_quant_ste_gradient():
+    """Inside the representable range, d(fake_quant)/dx == 1; outside == 0."""
+    spec = quant.FixedPointSpec(6, 5)
+    g = jax.grad(lambda x: quant.fake_quant(x, spec).sum())(
+        jnp.array([0.3, -0.2, 5.0, -5.0], jnp.float32))
+    np.testing.assert_array_equal(np.asarray(g), [1.0, 1.0, 0.0, 0.0])
+
+
+def test_fake_quant_none_is_identity():
+    x = jnp.arange(5, dtype=jnp.float32)
+    assert quant.fake_quant(x, None) is x
+
+
+@given(st.integers(1, 8))
+@settings(max_examples=8, deadline=None)
+def test_int4_pack_roundtrip(seed):
+    rng = np.random.default_rng(seed)
+    q = rng.integers(-8, 8, size=(4, 2 * seed)).astype(np.int32)
+    packed = quant.pack_int4(jnp.asarray(q))
+    assert packed.dtype == jnp.int8
+    assert packed.shape == (4, seed)
+    np.testing.assert_array_equal(np.asarray(quant.unpack_int4(packed)), q)
+
+
+def test_paper_configs():
+    cfg = quant.QuantConfig.paper_w6a4()
+    assert cfg.weight.total_bits == 6 and cfg.weight.frac_bits == 5
+    assert cfg.weight.int_bits == 1           # "1 bit for the integer part"
+    assert cfg.act.total_bits == 4 and cfg.act.frac_bits == 2
+    assert cfg.act.int_bits == 2              # "2 bits for the integer part"
+    conv16 = quant.QuantConfig.paper_w16a16()
+    assert conv16.weight.total_bits == 16
+
+
+def test_storage_bytes():
+    assert quant.storage_bytes_per_element(quant.FixedPointSpec(4, 2)) == 0.5
+    assert quant.storage_bytes_per_element(quant.FixedPointSpec(6, 5)) == 1.0
+    assert quant.storage_bytes_per_element(quant.FixedPointSpec(16, 8)) == 2.0
+    assert quant.storage_bytes_per_element(None) == 2.0

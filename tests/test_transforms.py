@@ -1,0 +1,162 @@
+"""Output-equivalence property tests for every streamline pass, plus the
+paper's two headline rewrites on the exact patterns from Fig. 4 / Sec. III-D."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quant
+from repro.core.graph import Graph, GraphBuildError, Node, execute
+from repro.core import transforms as T
+from repro.core.build import DEFAULT_MLP_STEPS, build_dataflow
+
+RNG = np.random.default_rng(1)
+
+
+def _thresholds(c, levels=7):
+    return np.sort(RNG.normal(size=(c, levels)).astype(np.float32), axis=1)
+
+
+# ---------------------------------------------------------------------------
+# Paper Sec. III-C: AbsorbTransposeIntoMultiThreshold on the Fig. 4 pattern
+# ---------------------------------------------------------------------------
+def _fig4_graph(c=8, levels=7):
+    """MatMul(NHWC out) -> Transpose(to NCHW) -> MultiThreshold(axis=1)."""
+    k_in = 12
+    w = RNG.normal(size=(k_in, c)).astype(np.float32)
+    t = _thresholds(c, levels)
+    nodes = [
+        Node("matmul", ["x", "w"], ["mm_nhwc"]),
+        Node("transpose", ["mm_nhwc"], ["mm_nchw"], {"perm": [0, 3, 1, 2]}),
+        Node("multithreshold", ["mm_nchw", "t"], ["act"],
+             {"channel_axis": 1, "out_base": 0}),
+    ]
+    return Graph(nodes, ["x"], ["act"], {"w": w, "t": t}, name="fig4")
+
+
+def test_absorb_transpose_fig4_equivalence():
+    g = _fig4_graph()
+    x = RNG.normal(size=(2, 4, 4, 12)).astype(np.float32)
+    before = execute(g, {"x": jnp.asarray(x)})[0]
+    g2 = T.AbsorbTransposeIntoMultiThreshold(g)
+    after = execute(g2, {"x": jnp.asarray(x)})[0]
+    np.testing.assert_allclose(np.asarray(before), np.asarray(after), rtol=1e-6)
+    # structural claims from the paper: MT now trailing-axis, transpose after
+    ops = [n.op for n in g2.nodes]
+    mt = next(n for n in g2.nodes if n.op == "multithreshold")
+    assert mt.attrs["channel_axis"] == -1
+    assert ops.index("multithreshold") < ops.index("transpose")
+
+
+def test_absorb_enables_mvau_fusion():
+    """Without the absorb pass, MVAU fusion cannot fire (the Fig. 4 failure);
+    with it, MatMul+MultiThreshold fuse into one mvau node."""
+    g = _fig4_graph()
+    g_nofix = T.FuseMatMulThresholdToMVAU(g)
+    assert not any(n.op == "mvau" for n in g_nofix.nodes)
+    g_fix = T.FuseMatMulThresholdToMVAU(T.AbsorbTransposeIntoMultiThreshold(g))
+    assert any(n.op == "mvau" for n in g_fix.nodes)
+    x = RNG.normal(size=(1, 3, 3, 12)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(execute(g, {"x": jnp.asarray(x)})[0]),
+        np.asarray(execute(g_fix, {"x": jnp.asarray(x)})[0]),
+        rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Paper Sec. III-D: ConvertReduceMeanToGAP
+# ---------------------------------------------------------------------------
+@given(st.integers(1, 3), st.integers(1, 6), st.integers(1, 6), st.integers(1, 8))
+@settings(max_examples=20, deadline=None)
+def test_reduce_mean_to_gap_equivalence(n, h, w, c):
+    g = Graph([Node("reduce_mean", ["x"], ["y"],
+                    {"axes": [1, 2], "spatial_size": h * w})],
+              ["x"], ["y"], {}, name="rm")
+    x = RNG.normal(size=(n, h, w, c)).astype(np.float32)
+    before = execute(g, {"x": jnp.asarray(x)})[0]
+    g2 = T.ConvertReduceMeanToGAP(g)
+    after = execute(g2, {"x": jnp.asarray(x)})[0]
+    np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                               rtol=1e-5, atol=1e-6)
+    ops = [nd.op for nd in g2.nodes]
+    assert "reduce_mean" not in ops
+    assert ops == ["global_acc_pool", "mul"]  # sum first, scale after — no div
+
+
+def test_gap_scale_folds_into_thresholds():
+    """GAP's 1/(H·W) Mul disappears into the next MultiThreshold — the
+    division never exists in the datapath."""
+    c = 6
+    t = _thresholds(c)
+    g = Graph(
+        [Node("reduce_mean", ["x"], ["m"], {"axes": [1, 2], "spatial_size": 16}),
+         Node("multithreshold", ["m", "t"], ["y"],
+              {"channel_axis": -1, "out_base": 0})],
+        ["x"], ["y"], {"t": t}, name="gapfold")
+    x = RNG.normal(size=(2, 4, 4, c)).astype(np.float32)
+    before = execute(g, {"x": jnp.asarray(x)})[0]
+    g2 = T.FoldMulIntoMultiThreshold(T.ConvertReduceMeanToGAP(g))
+    ops = [nd.op for nd in g2.nodes]
+    assert ops == ["global_acc_pool", "multithreshold"]
+    after = execute(g2, {"x": jnp.asarray(x)})[0]
+    np.testing.assert_allclose(np.asarray(before), np.asarray(after),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Supporting passes: equivalence under random scalar chains
+# ---------------------------------------------------------------------------
+@given(st.lists(st.floats(0.125, 4.0, width=32), min_size=2, max_size=5))
+@settings(max_examples=20, deadline=None)
+def test_collapse_repeated_mul(scales):
+    nodes, src = [], "x"
+    for i, s in enumerate(scales):
+        nodes.append(Node("mul", [src], [f"m{i}"], {"value": float(s)}))
+        src = f"m{i}"
+    g = Graph(nodes, ["x"], [src], {}, name="muls")
+    x = RNG.normal(size=(3, 5)).astype(np.float32)
+    before = execute(g, {"x": jnp.asarray(x)})[0]
+    g2 = T.CollapseRepeatedMul(g)
+    assert sum(n.op == "mul" for n in g2.nodes) == 1
+    np.testing.assert_allclose(np.asarray(before),
+                               np.asarray(execute(g2, {"x": jnp.asarray(x)})[0]),
+                               rtol=1e-5)
+
+
+@given(st.floats(0.125, 4.0, width=32))
+@settings(max_examples=20, deadline=None)
+def test_move_mul_past_matmul(s):
+    w = RNG.normal(size=(6, 4)).astype(np.float32)
+    g = Graph([Node("mul", ["x"], ["sx"], {"value": float(s)}),
+               Node("matmul", ["sx", "w"], ["y"])],
+              ["x"], ["y"], {"w": w}, name="mvmm")
+    x = RNG.normal(size=(5, 6)).astype(np.float32)
+    before = execute(g, {"x": jnp.asarray(x)})[0]
+    g2 = T.MoveMulPastMatMul(g)
+    assert [n.op for n in g2.nodes] == ["matmul", "mul"]
+    np.testing.assert_allclose(np.asarray(before),
+                               np.asarray(execute(g2, {"x": jnp.asarray(x)})[0]),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_cancel_transpose_pairs():
+    g = Graph([Node("transpose", ["x"], ["a"], {"perm": [0, 3, 1, 2]}),
+               Node("transpose", ["a"], ["b"], {"perm": [0, 2, 3, 1]}),
+               Node("mul", ["b"], ["y"], {"value": 2.0})],
+              ["x"], ["y"], {}, name="tp")
+    x = RNG.normal(size=(1, 3, 4, 5)).astype(np.float32)
+    before = execute(g, {"x": jnp.asarray(x)})[0]
+    g2 = T.CancelTransposePairs(g)
+    assert [n.op for n in g2.nodes] == ["mul"]
+    np.testing.assert_allclose(np.asarray(before),
+                               np.asarray(execute(g2, {"x": jnp.asarray(x)})[0]))
+
+
+def test_verify_hw_mappable_gate():
+    """The paper's failure mode: un-streamlined graphs must be rejected."""
+    g = Graph([Node("reduce_mean", ["x"], ["y"],
+                    {"axes": [1, 2], "spatial_size": 4})],
+              ["x"], ["y"], {}, name="bad")
+    with pytest.raises(GraphBuildError, match="reduce_mean"):
+        build_dataflow(g, DEFAULT_MLP_STEPS)
