@@ -15,7 +15,7 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
-                    help="comma list: table2,table3,fig5,roofline")
+                    help="comma list: table2,table3,fig5,roofline,compile")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else set()
 
@@ -32,6 +32,9 @@ def main(argv=None) -> None:
     if want("fig5"):
         from benchmarks import fig5_pipeline
         fig5_pipeline.run(quick=args.quick)
+    if want("compile"):
+        from benchmarks import compile_bench
+        compile_bench.run(quick=args.quick)
     if want("roofline"):
         from benchmarks import roofline
         try:

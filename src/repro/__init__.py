@@ -1,0 +1,50 @@
+"""repro — bit-width-aware design environment for few-shot learning.
+
+Public compiler surface::
+
+    import repro
+    dm = repro.compile(graph_or_params, qcfg, recipe="resnet9")
+    features = dm(x)                      # single jitted program
+
+Attribute access is lazy (PEP 562): ``import repro`` must never initialize
+jax, because entry points like ``repro.launch.dryrun`` set ``XLA_FLAGS``
+at module top *before* the first jax import and would otherwise lose their
+forced device count.
+"""
+
+__all__ = ["compile", "DeployedModel", "PassManager", "PassOrderError",
+           "PassVerificationError", "BuildRecipe", "recipe",
+           "register_recipe", "register_pass", "QuantConfig",
+           "FixedPointSpec", "Graph", "execute"]
+
+_EXPORTS = {
+    "compile": ("repro.core.deploy", "compile"),
+    "DeployedModel": ("repro.core.deploy", "DeployedModel"),
+    "PassManager": ("repro.core.passes", "PassManager"),
+    "PassOrderError": ("repro.core.passes", "PassOrderError"),
+    "PassVerificationError": ("repro.core.passes", "PassVerificationError"),
+    "register_pass": ("repro.core.passes", "register_pass"),
+    "BuildRecipe": ("repro.core.recipes", "BuildRecipe"),
+    "recipe": ("repro.core.recipes", "recipe"),
+    "register_recipe": ("repro.core.recipes", "register_recipe"),
+    "QuantConfig": ("repro.core.quant", "QuantConfig"),
+    "FixedPointSpec": ("repro.core.quant", "FixedPointSpec"),
+    "Graph": ("repro.core.graph", "Graph"),
+    "execute": ("repro.core.graph", "execute"),
+}
+
+
+def __getattr__(name: str):
+    try:
+        module, attr = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro' has no attribute '{name}'") from None
+    import importlib
+
+    value = getattr(importlib.import_module(module), attr)
+    globals()[name] = value
+    return value
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_EXPORTS))

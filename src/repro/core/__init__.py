@@ -1,4 +1,11 @@
-"""Core: arbitrary-bit-width quantization + FINN-style graph streamlining."""
+"""Core: arbitrary-bit-width quantization + FINN-style graph compilation.
+
+Layering (bottom to top — see DESIGN.md):
+
+quant  →  graph (IR + interpreter)  →  transforms (rewrites)  →
+passes (PassManager + registry)  →  recipes (per-arch orderings)  →
+deploy (``repro.compile`` → ``DeployedModel``)
+"""
 
 from repro.core.quant import (  # noqa: F401
     FixedPointSpec,
@@ -12,7 +19,24 @@ from repro.core.quant import (  # noqa: F401
     unpack_int4,
 )
 from repro.core.graph import Graph, GraphBuildError, Node, execute  # noqa: F401
-from repro.core.build import (  # noqa: F401
+from repro.core.passes import (  # noqa: F401
+    GraphPass,
+    PassManager,
+    PassOrderError,
+    PassVerificationError,
+    PassTrace,
+    register_pass,
+)
+from repro.core.recipes import (  # noqa: F401
+    BuildRecipe,
+    list_recipes,
+    recipe,
+    register_lazy_recipe,
+    register_recipe,
+)
+from repro.core.deploy import DeployedModel, lower_graph  # noqa: F401
+from repro.core.deploy import compile as compile_graph  # noqa: F401
+from repro.core.build import (  # noqa: F401  (deprecated shims)
     DEFAULT_MLP_STEPS,
     RESNET9_BUILD_STEPS,
     build_dataflow,

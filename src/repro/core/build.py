@@ -1,12 +1,22 @@
-"""FINN-style build-step pipelines (paper Sec. III-A).
+"""FINN-style build-step pipelines (paper Sec. III-A) — legacy surface.
+
+.. deprecated::
+    This module is the thin compatibility shim over the real compiler API:
+    :mod:`repro.core.passes` (PassManager + named-pass registry),
+    :mod:`repro.core.recipes` (per-architecture ``BuildRecipe``), and
+    :func:`repro.compile` (the ``DeployedModel`` artifact).  The step lists
+    below are kept so existing call sites and the paper-failure repro
+    (``tests/test_resnet9.py``) keep working; new code should use
+    ``repro.compile(graph, qcfg, recipe="resnet9")`` or
+    ``PassManager().run(graph, recipe("resnet9").passes)``.
 
 FINN drives hardware generation through an ordered list of transformation
 steps.  The paper's point is that this list is *architecture-dependent*: the
 tutorial MLP steps do not transfer to ResNet-9, which needs (1) the
 transpose-absorption fix and (2) the ReduceMean→GAP conversion, inserted in
-the right order.  Both step lists are exposed so the failure is reproducible
-(``tests/test_build.py`` asserts DEFAULT_MLP_STEPS raises on the ResNet-9
-graph while RESNET9_BUILD_STEPS builds it).
+the right order.  Running ``DEFAULT_MLP_STEPS`` on the ResNet-9 graph now
+fails *loudly at the mis-ordered pass* (PassOrderError precondition check)
+instead of building a silently broken design.
 """
 
 from __future__ import annotations
@@ -15,11 +25,11 @@ from typing import List, Sequence
 
 from repro.core import transforms as T
 from repro.core.graph import Graph
+from repro.core.passes import PassManager
 
 __all__ = ["DEFAULT_MLP_STEPS", "RESNET9_BUILD_STEPS", "build_dataflow"]
 
-# The FINN tutorial flow for a plain MLP: no layout juggling, no spatial
-# reductions — streamline scales, fuse MVAUs, done.
+# The FINN tutorial flow for a plain MLP — see recipes.recipe("mlp").
 DEFAULT_MLP_STEPS: List[T.Transform] = [
     T.MoveMulPastMatMul,
     T.CollapseRepeatedMul,
@@ -28,13 +38,8 @@ DEFAULT_MLP_STEPS: List[T.Transform] = [
     T.VerifyHWMappable,
 ]
 
-# The paper's customized ResNet-9 flow ("introducing transformation classes
-# not included in the default build and rearranging the order as needed"):
-#   1. ReduceMean -> GlobalAccPool + Mul  (Sec. III-D)
-#   2. Absorb NHWC->NCHW transposes into MultiThreshold  (Sec. III-C)
-#   3. Cancel the re-emitted transposes against ingest transposes
-#   4. Push scales past matmuls, collapse, fold into thresholds
-#   5. Fuse MatMul+MultiThreshold -> MVAU, then gate on HW-mappability
+# The paper's customized ResNet-9 flow — see recipes.recipe("resnet9")
+# (registered by repro.models.resnet9 next to its export code).
 RESNET9_BUILD_STEPS: List[T.Transform] = [
     T.ConvertReduceMeanToGAP,
     T.AbsorbTransposeIntoMultiThreshold,
@@ -49,5 +54,10 @@ RESNET9_BUILD_STEPS: List[T.Transform] = [
 
 def build_dataflow(graph: Graph, steps: Sequence[T.Transform]) -> Graph:
     """Apply a build-step list; returns the HW-ready graph or raises
-    :class:`~repro.core.graph.GraphBuildError`."""
-    return T.apply_transforms(graph, steps)
+    :class:`~repro.core.graph.GraphBuildError`.
+
+    Deprecated shim: delegates to the PassManager, so raw transform
+    functions are resolved to their registered passes and get precondition
+    checking and ordering validation for free.
+    """
+    return PassManager().run(graph, steps).graph

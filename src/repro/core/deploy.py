@@ -1,0 +1,168 @@
+"""``repro.compile()`` — lower a QAT graph to a jitted deployment artifact.
+
+The top of the compiler stack (DESIGN.md): pick a :class:`BuildRecipe`,
+stream the graph through the :class:`PassManager` (precondition-checked,
+optionally golden-IO-verified per pass), then lower the HW-mapped graph to a
+**single jitted callable**:
+
+* initializers (quantized weights, threshold tables) are closed over as
+  constants — XLA folds and lays them out once at compile time;
+* each node dispatches through the kernel table from
+  :func:`repro.kernels.ops.graph_op_impls` (Pallas MVAU / GlobalAccPool) or
+  the interpreter executors for pure data-movement ops;
+* the whole network traces into ONE program, replacing the per-node Python
+  interpreter loop (``graph.execute``) on the hot path — that loop re-traces
+  and re-dispatches every op on every call, which is the dominant serving
+  cost on CPU (measured in ``benchmarks/compile_bench.py``).
+
+The artifact is a :class:`DeployedModel`: call it like a function on batched
+inputs; ``.apply`` is the raw un-jitted function for composition under
+``jax.vmap`` / ``jax.jit`` of a larger program; ``.trace`` holds the per-pass
+build report.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import recipes as R
+from repro.core.graph import _EXECUTORS, Graph, GraphBuildError
+from repro.core.passes import PassManager, PassTrace
+
+__all__ = ["DeployedModel", "compile", "lower_graph"]
+
+
+def lower_graph(graph: Graph, interpret: Optional[bool] = None) -> Callable:
+    """Close a (streamlined) graph over its initializers and return a pure
+    ``(*inputs) -> tuple(outputs)`` function, ready for ``jax.jit``/``vmap``.
+    """
+    from repro.kernels import ops as kops
+
+    impls = dict(_EXECUTORS)
+    impls.update(kops.graph_op_impls(interpret))
+    missing = sorted({n.op for n in graph.nodes if n.op not in impls})
+    if missing:
+        raise GraphBuildError(f"cannot lower graph '{graph.name}': no "
+                              f"implementation for ops {missing}")
+    consts = {k: jnp.asarray(v) for k, v in graph.initializers.items()}
+    nodes = [n.copy() for n in graph.nodes]       # freeze against later edits
+    input_names = tuple(graph.inputs)
+    output_names = tuple(graph.outputs)
+
+    def apply_fn(*inputs):
+        if len(inputs) != len(input_names):
+            raise TypeError(f"graph '{graph.name}' takes {len(input_names)} "
+                            f"input(s) {input_names}, got {len(inputs)}")
+        env: Dict[str, jax.Array] = dict(consts)
+        env.update(zip(input_names, inputs))
+        for node in nodes:
+            out = impls[node.op](node, *[env[i] for i in node.inputs])
+            outs = out if isinstance(out, (tuple, list)) else (out,)
+            for name, val in zip(node.outputs, outs):
+                env[name] = val
+        return tuple(env[o] for o in output_names)
+
+    return apply_fn
+
+
+@dataclasses.dataclass
+class DeployedModel:
+    """A compiled, executable deployment artifact.
+
+    ``__call__`` runs the jitted program (returns a single array when the
+    graph has a single output).  ``apply`` is the raw traced function —
+    ``jax.vmap(dm.apply)`` batches over a leading axis, and embedding
+    ``dm.apply`` inside a larger jitted program fuses it with the caller.
+    """
+
+    graph: Graph
+    recipe_name: str
+    trace: PassTrace
+    apply: Callable
+    input_names: Tuple[str, ...]
+    output_names: Tuple[str, ...]
+    _jitted: Optional[Callable] = None
+
+    def __post_init__(self):
+        if self._jitted is None:
+            self._jitted = jax.jit(self.apply)
+
+    def __call__(self, *inputs, **feeds):
+        if feeds:
+            try:
+                args = tuple(feeds[n] for n in self.input_names)
+            except KeyError as e:
+                raise TypeError(f"missing graph input {e}; expected "
+                                f"{self.input_names}") from None
+            if inputs:
+                raise TypeError("pass inputs positionally or by name, not both")
+        else:
+            args = inputs
+        outs = self._jitted(*args)
+        return outs[0] if len(self.output_names) == 1 else outs
+
+    def op_counts(self) -> Dict[str, int]:
+        from repro.core.passes import op_histogram
+
+        return op_histogram(self.graph)
+
+    def report(self) -> str:
+        ops = ", ".join(f"{k}×{v}" for k, v in sorted(self.op_counts().items()))
+        return (f"DeployedModel('{self.graph.name}', recipe='{self.recipe_name}', "
+                f"{len(self.graph.nodes)} nodes: {ops})\n" + self.trace.report())
+
+
+def compile(graph_or_model: Any, qcfg: Any = None, *,
+            recipe: Union[str, R.BuildRecipe],
+            sample_input: Optional[jax.Array] = None,
+            verify_feeds: Optional[Dict[str, Any]] = None,
+            interpret: Optional[bool] = None,
+            rtol: float = 1e-5, atol: float = 1e-6) -> DeployedModel:
+    """Build a :class:`DeployedModel` from a graph or a native model object.
+
+    Args:
+      graph_or_model: a :class:`Graph` (e.g. from ``resnet9.export_graph``),
+        or the recipe's native model object (a ResNet-9 param tree for
+        ``recipe="resnet9"``) if the recipe registered an ``exporter``.
+      qcfg: the :class:`QuantConfig` — forwarded to the exporter; unused when
+        a pre-exported graph is given.
+      recipe: registered recipe name or a :class:`BuildRecipe` — required,
+        because the pass list is architecture-dependent (the paper's core
+        point): silently defaulting would mis-build foreign graphs.
+      sample_input: optional golden input for FINN-style per-pass IO
+        verification (single-input graphs; use ``verify_feeds`` otherwise).
+      interpret: force Pallas interpret mode (default: auto — interpreted
+        off-TPU, compiled on TPU).
+
+    Raises :class:`~repro.core.passes.PassOrderError` on mis-ordered
+    recipes, :class:`~repro.core.passes.PassVerificationError` if a pass
+    breaks golden-IO equivalence, and
+    :class:`~repro.core.graph.GraphBuildError` if the streamlined graph is
+    not HW-mappable.
+    """
+    rec = R.recipe(recipe) if isinstance(recipe, str) else recipe
+    if isinstance(graph_or_model, Graph):
+        graph = graph_or_model
+    elif rec.exporter is not None:
+        graph = rec.exporter(graph_or_model, qcfg)
+    else:
+        raise TypeError(
+            f"recipe '{rec.name}' has no exporter; pass a Graph (got "
+            f"{type(graph_or_model).__name__})")
+    if sample_input is not None and verify_feeds is None:
+        if len(graph.inputs) != 1:
+            raise ValueError("sample_input needs a single-input graph; use "
+                             "verify_feeds for multi-input graphs")
+        verify_feeds = {graph.inputs[0]: sample_input}
+
+    result = PassManager(rtol=rtol, atol=atol).run(
+        graph, rec.passes, verify_feeds=verify_feeds)
+    hw = result.graph
+    return DeployedModel(
+        graph=hw, recipe_name=rec.name, trace=result.trace,
+        apply=lower_graph(hw, interpret),
+        input_names=tuple(hw.inputs), output_names=tuple(hw.outputs))

@@ -24,22 +24,39 @@ Ops (all the paper's ResNet-9 needs, plus the fused HW ops):
 Tensors flow in a named environment; layouts are tracked as node attrs so the
 transpose-absorption pass can reason about NCHW/NHWC explicitly (paper
 Sec. III-C).
+
+Graph-query complexity: ``producer``/``consumers`` are backed by a lazily
+built index (one O(V+E) sweep) that mutating passes drop via
+:meth:`Graph.invalidate` — without it every streamline pass iteration paid an
+O(n²) rescan (measured in ``benchmarks/compile_bench.py``).  ``toposort`` is
+Kahn's algorithm on the same adjacency information.
 """
 
 from __future__ import annotations
 
+import collections
 import dataclasses
-from typing import Any, Callable, Dict, List, Optional, Sequence
+from typing import Any, Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["Node", "Graph", "execute", "GraphBuildError"]
+__all__ = ["Node", "Graph", "execute", "GraphBuildError", "set_index_enabled"]
 
 
 class GraphBuildError(RuntimeError):
     """A graph reached the HW-mapping stage with non-mappable nodes."""
+
+
+# Escape hatch for benchmarking the cached index against the old linear
+# scans (benchmarks/compile_bench.py flips this) — not for production use.
+_INDEX_ENABLED = True
+
+
+def set_index_enabled(enabled: bool) -> None:
+    global _INDEX_ENABLED
+    _INDEX_ENABLED = bool(enabled)
 
 
 @dataclasses.dataclass
@@ -60,48 +77,203 @@ class Graph:
     outputs: List[str]
     initializers: Dict[str, np.ndarray] = dataclasses.field(default_factory=dict)
     name: str = "graph"
+    # Verified structural properties (tokens such as
+    # "trailing_axis_thresholds") — maintained by the PassManager, advisory
+    # for humans; precondition checks always re-derive from structure.
+    properties: Set[str] = dataclasses.field(default_factory=set)
+    # Optional tensor-shape annotations, filled by infer_shapes().
+    shapes: Dict[str, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
+    _cache: Optional[Dict[str, Any]] = dataclasses.field(
+        default=None, init=False, repr=False, compare=False)
 
     def copy(self) -> "Graph":
-        return Graph([n.copy() for n in self.nodes], list(self.inputs),
-                     list(self.outputs), dict(self.initializers), self.name)
+        g = Graph([n.copy() for n in self.nodes], list(self.inputs),
+                  list(self.outputs), dict(self.initializers), self.name,
+                  set(self.properties), dict(self.shapes))
+        return g
+
+    # -- cached adjacency index --------------------------------------------
+    def invalidate(self) -> None:
+        """Drop the producer/consumer index.  Call after mutating node
+        wiring *directly*; the structured mutators below (``set_input``,
+        ``remove_node``, ``insert_node``, ...) maintain the index
+        incrementally and do NOT require it."""
+        self._cache = None
+
+    # -- structured mutators (keep the adjacency index valid in O(1)) -------
+    def set_input(self, node: Node, pos: int, tensor: str) -> None:
+        old = node.inputs[pos]
+        node.inputs[pos] = tensor
+        c = self._cache
+        if c is not None and old != tensor:
+            lst = c["cons"].get(old)
+            if lst and node in lst:
+                lst.remove(node)            # one occurrence per position
+            c["cons"].setdefault(tensor, []).append(node)
+            c["names"].add(tensor)
+
+    def set_output(self, node: Node, pos: int, tensor: str) -> None:
+        old = node.outputs[pos]
+        node.outputs[pos] = tensor
+        c = self._cache
+        if c is not None and old != tensor:
+            if c["prod"].get(old) is node:
+                del c["prod"][old]
+            c["prod"][tensor] = node
+            c["names"].add(tensor)
+
+    def remove_node(self, node: Node) -> None:
+        self.nodes.remove(node)
+        c = self._cache
+        if c is not None:
+            for t in node.outputs:
+                if c["prod"].get(t) is node:
+                    del c["prod"][t]
+            for t in node.inputs:
+                lst = c["cons"].get(t)
+                if lst and node in lst:
+                    lst.remove(node)
+
+    def insert_node(self, pos: int, node: Node) -> None:
+        self.nodes.insert(pos, node)
+        c = self._cache
+        if c is not None:
+            for t in node.outputs:
+                c["prod"][t] = node
+                c["names"].add(t)
+            for t in node.inputs:
+                c["cons"].setdefault(t, []).append(node)
+                c["names"].add(t)
+
+    def insert_after(self, ref: Node, node: Node) -> None:
+        self.insert_node(self.nodes.index(ref) + 1, node)
+
+    def _index(self) -> Optional[Dict[str, Any]]:
+        if not _INDEX_ENABLED:
+            return None
+        if self._cache is None:
+            prod: Dict[str, Node] = {}
+            cons: Dict[str, List[Node]] = {}
+            names: Set[str] = set(self.initializers)
+            for n in self.nodes:
+                for t in n.outputs:
+                    prod[t] = n
+                    names.add(t)
+                for t in n.inputs:
+                    cons.setdefault(t, []).append(n)
+                    names.add(t)
+            self._cache = {"prod": prod, "cons": cons, "names": names}
+        return self._cache
 
     # -- small query helpers used by the transform passes -------------------
     def producer(self, tensor: str) -> Optional[Node]:
+        idx = self._index()
+        if idx is not None:
+            return idx["prod"].get(tensor)
         for n in self.nodes:
             if tensor in n.outputs:
                 return n
         return None
 
     def consumers(self, tensor: str) -> List[Node]:
+        idx = self._index()
+        if idx is not None:
+            # the index stores one entry per consuming *position* (so the
+            # mutators can retire occurrences one at a time); de-dup here so
+            # a node reading the same tensor twice is reported once, exactly
+            # like the linear scan
+            seen, out = set(), []
+            for n in idx["cons"].get(tensor, ()):
+                if id(n) not in seen:
+                    seen.add(id(n))
+                    out.append(n)
+            return out
         return [n for n in self.nodes if tensor in n.inputs]
 
     def fresh_name(self, stem: str) -> str:
-        taken = set(self.initializers)
-        for n in self.nodes:
-            taken.update(n.inputs)
-            taken.update(n.outputs)
+        idx = self._index()
+        if idx is not None:
+            taken = idx["names"]
+        else:
+            taken = set(self.initializers)
+            for n in self.nodes:
+                taken.update(n.inputs)
+                taken.update(n.outputs)
         i = 0
         while f"{stem}_{i}" in taken:
             i += 1
         return f"{stem}_{i}"
 
     def toposort(self) -> None:
-        """Re-order ``nodes`` topologically (env-availability order)."""
+        """Re-order ``nodes`` topologically (Kahn's algorithm, O(V+E))."""
         avail = set(self.inputs) | set(self.initializers)
+        indeg: Dict[int, int] = {}
+        waiting: Dict[str, List[Node]] = {}
+        ready: collections.deque = collections.deque()
+        for n in self.nodes:
+            d = 0
+            for i in n.inputs:
+                if i not in avail:
+                    d += 1
+                    waiting.setdefault(i, []).append(n)
+            indeg[id(n)] = d
+            if d == 0:
+                ready.append(n)
         ordered: List[Node] = []
-        pending = list(self.nodes)
-        while pending:
-            progressed = False
-            for n in list(pending):
-                if all(i in avail for i in n.inputs):
-                    ordered.append(n)
-                    avail.update(n.outputs)
-                    pending.remove(n)
-                    progressed = True
-            if not progressed:
-                missing = {i for n in pending for i in n.inputs if i not in avail}
-                raise GraphBuildError(f"graph has unsatisfiable inputs: {missing}")
+        while ready:
+            n = ready.popleft()
+            ordered.append(n)
+            for t in n.outputs:
+                if t in avail:
+                    continue
+                avail.add(t)
+                for c in waiting.get(t, ()):
+                    indeg[id(c)] -= 1
+                    if indeg[id(c)] == 0:
+                        ready.append(c)
+        if len(ordered) != len(self.nodes):
+            missing = {i for n in self.nodes if indeg[id(n)] > 0
+                       for i in n.inputs if i not in avail}
+            raise GraphBuildError(f"graph has unsatisfiable inputs: {missing}")
         self.nodes = ordered
+        self.invalidate()
+
+    # -- pass-manager integration -------------------------------------------
+    def transform(self, pass_like, **kwargs) -> "Graph":
+        """Apply one registered pass (by name, GraphPass, or raw callable),
+        with its preconditions checked.  Returns the rewritten graph."""
+        from repro.core.passes import apply_pass
+
+        return apply_pass(self, pass_like, **kwargs)
+
+    def infer_shapes(self, feeds: Dict[str, Any]) -> "Graph":
+        """Annotate ``self.shapes`` for every tensor by abstract evaluation
+        (no FLOPs — ``jax.eval_shape`` over the interpreter).  ``feeds`` maps
+        graph inputs to arrays or ShapeDtypeStructs."""
+        shapes: Dict[str, Tuple[int, ...]] = {}
+
+        def run(feed_structs):
+            env = {k: jnp.zeros(v.shape, v.dtype)
+                   for k, v in self.initializers.items()}
+            env.update(feed_structs)
+            for node in self.nodes:
+                fn = _EXECUTORS.get(node.op)
+                if fn is None:
+                    raise GraphBuildError(f"no executor for op '{node.op}'")
+                out = fn(node, *[env[i] for i in node.inputs])
+                outs = out if isinstance(out, (tuple, list)) else (out,)
+                for nm, val in zip(node.outputs, outs):
+                    env[nm] = val
+            return env
+
+        structs = {k: jax.ShapeDtypeStruct(np.shape(v) or getattr(v, "shape", ()),
+                                           getattr(v, "dtype", jnp.float32))
+                   for k, v in feeds.items()}
+        env = jax.eval_shape(run, structs)
+        for nm, sds in env.items():
+            shapes[nm] = tuple(sds.shape)
+        self.shapes = shapes
+        return self
 
 
 # ---------------------------------------------------------------------------
@@ -187,7 +359,13 @@ def _maxpool(node: Node, x: jax.Array) -> jax.Array:
 
 
 def execute(graph: Graph, feeds: Dict[str, jax.Array]) -> List[jax.Array]:
-    """Run the graph; returns the output tensors in ``graph.outputs`` order."""
+    """Run the graph; returns the output tensors in ``graph.outputs`` order.
+
+    This is the per-node *interpreter*: each op dispatches eagerly, which is
+    perfect for debugging passes (inspect any intermediate tensor by name)
+    and exactly what :class:`repro.core.deploy.DeployedModel` replaces on the
+    serving hot path with a single jitted program.
+    """
     env: Dict[str, jax.Array] = {k: jnp.asarray(v) for k, v in graph.initializers.items()}
     env.update({k: jnp.asarray(v) for k, v in feeds.items()})
     for node in graph.nodes:

@@ -1,0 +1,97 @@
+"""Architecture build recipes: named, registered pass orderings.
+
+The paper's Sec. III-A point is that the FINN build-step list is
+*architecture-dependent* — the tutorial MLP list cannot build ResNet-9; the
+customized list can.  A :class:`BuildRecipe` makes that list a first-class,
+registered artifact: models register their own recipe next to their export
+code (``repro/models/resnet9.py`` registers ``"resnet9"``) and
+``repro.compile(graph, qcfg, recipe="resnet9")`` looks it up — new backbones
+(PEFSL variants, MLPerf-Tiny CNNs) plug in without touching anything under
+``repro/core``.
+
+Recipes are validated against the pass registry at registration time (every
+pass name must exist) and order-checked by the PassManager at build time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from repro.core import passes as P
+
+__all__ = ["BuildRecipe", "register_recipe", "register_lazy_recipe",
+           "recipe", "list_recipes"]
+
+
+@dataclasses.dataclass(frozen=True)
+class BuildRecipe:
+    """An ordered pass list plus an optional model exporter.
+
+    ``exporter(model, qcfg) -> Graph`` lets ``repro.compile`` accept the
+    architecture's native model object (e.g. a ResNet-9 param tree) instead
+    of a pre-exported graph.
+    """
+
+    name: str
+    passes: Tuple[str, ...]
+    description: str = ""
+    exporter: Optional[Callable] = None
+
+
+_RECIPES: Dict[str, BuildRecipe] = {}
+
+# name -> module that registers it on import.  Keeps ``recipe("resnet9")``
+# working without eagerly importing model code; new architectures may call
+# register_lazy_recipe from any package-init hook.
+_LAZY: Dict[str, str] = {"resnet9": "repro.models.resnet9"}
+
+
+def register_recipe(name: str, passes: Sequence[str], *,
+                    description: str = "",
+                    exporter: Optional[Callable] = None) -> BuildRecipe:
+    for p in passes:
+        if isinstance(p, str) and p not in P.PASS_REGISTRY:
+            raise KeyError(f"recipe '{name}' references unknown pass '{p}'; "
+                           f"registered: {sorted(P.PASS_REGISTRY)}")
+    r = BuildRecipe(name, tuple(passes), description, exporter)
+    _RECIPES[name] = r
+    return r
+
+
+def register_lazy_recipe(name: str, module: str) -> None:
+    """Point a recipe name at the module whose import registers it."""
+    _LAZY[name] = module
+
+
+def recipe(name: str) -> BuildRecipe:
+    if name not in _RECIPES and name in _LAZY:
+        importlib.import_module(_LAZY[name])
+    if name not in _RECIPES:
+        raise KeyError(f"unknown recipe '{name}'; registered: "
+                       f"{sorted(set(_RECIPES) | set(_LAZY))}")
+    return _RECIPES[name]
+
+
+def list_recipes() -> Dict[str, str]:
+    for name, module in list(_LAZY.items()):
+        if name not in _RECIPES:
+            try:
+                importlib.import_module(module)
+            except ImportError:
+                pass
+    return {name: r.description for name, r in sorted(_RECIPES.items())}
+
+
+# The FINN tutorial flow for a plain MLP: no layout juggling, no spatial
+# reductions — streamline scales, fuse MVAUs, done.  Owned by core because it
+# is the reference/baseline recipe the paper contrasts against.
+register_recipe(
+    "mlp",
+    ["move_mul_past_matmul",
+     "collapse_repeated_mul",
+     "fold_mul_into_multithreshold",
+     "fuse_matmul_threshold_to_mvau",
+     "verify_hw_mappable"],
+    description="FINN tutorial MLP flow (paper Sec. III-A baseline)")

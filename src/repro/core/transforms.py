@@ -61,19 +61,22 @@ def AbsorbTransposeIntoMultiThreshold(g: Graph) -> Graph:
             if len(consumers) != 1 or consumers[0].op != "multithreshold":
                 continue
             mt = consumers[0]
-            if mt.attrs.get("channel_axis", 1) != 1:
+            # only absorb MTs explicitly marked NCHW (axis 1); a missing
+            # attr means trailing-axis (the interpreter's default), and
+            # rewiring those would change semantics
+            if mt.attrs.get("channel_axis", -1) != 1:
                 continue
             # Rewire: MT reads the transpose's input with trailing channels;
             # a new transpose after MT restores NCHW for downstream users.
             mt_out = mt.outputs[0]
             new_mt_out = g.fresh_name(mt_out + "_nhwc")
-            mt.inputs[0] = node.inputs[0]
+            g.set_input(mt, 0, node.inputs[0])
             mt.attrs["channel_axis"] = -1
-            mt.outputs[0] = new_mt_out
+            g.set_output(mt, 0, new_mt_out)
             post = Node("transpose", [new_mt_out], [mt_out],
                         {"perm": list(_NHWC_TO_NCHW)})
-            g.nodes.insert(g.nodes.index(mt) + 1, post)
-            g.nodes.remove(node)
+            g.insert_after(mt, post)
+            g.remove_node(node)
             changed = True
             break
     g.toposort()
@@ -98,6 +101,10 @@ def ConvertReduceMeanToGAP(g: Graph) -> Graph:
             continue
         axes = tuple(node.attrs["axes"])
         hw = node.attrs.get("spatial_size")
+        if hw is None and node.inputs[0] in g.shapes:
+            # fall back to the shape annotations from Graph.infer_shapes()
+            in_shape = g.shapes[node.inputs[0]]
+            hw = int(np.prod([in_shape[a] for a in axes]))
         if hw is None:
             raise GraphBuildError(
                 "reduce_mean lacks spatial_size attr; shape inference must "
@@ -106,7 +113,9 @@ def ConvertReduceMeanToGAP(g: Graph) -> Graph:
         gap = Node("global_acc_pool", [node.inputs[0]], [acc_out], {"axes": list(axes)})
         mul = Node("mul", [acc_out], [node.outputs[0]], {"value": 1.0 / float(hw)})
         i = g.nodes.index(node)
-        g.nodes[i:i + 1] = [gap, mul]
+        g.remove_node(node)
+        g.insert_node(i, gap)
+        g.insert_node(i + 1, mul)
     g.toposort()
     return g
 
@@ -134,10 +143,12 @@ def CancelTransposePairs(g: Graph) -> Graph:
             # rewire consumers of nxt's output straight to node's input
             src = node.inputs[0]
             for c in g.consumers(nxt.outputs[0]):
-                c.inputs = [src if i == nxt.outputs[0] else i for i in c.inputs]
+                for pos, i in enumerate(c.inputs):
+                    if i == nxt.outputs[0]:
+                        g.set_input(c, pos, src)
             g.outputs = [src if o == nxt.outputs[0] else o for o in g.outputs]
-            g.nodes.remove(node)
-            g.nodes.remove(nxt)
+            g.remove_node(node)
+            g.remove_node(nxt)
             changed = True
             break
     g.toposort()
@@ -159,8 +170,8 @@ def CollapseRepeatedMul(g: Graph) -> Graph:
                 continue
             nxt = consumers[0]
             nxt.attrs["value"] = float(nxt.attrs["value"]) * float(node.attrs["value"])
-            nxt.inputs[0] = node.inputs[0]
-            g.nodes.remove(node)
+            g.set_input(nxt, 0, node.inputs[0])
+            g.remove_node(node)
             changed = True
             break
     g.toposort()
@@ -185,12 +196,12 @@ def MoveMulPastMatMul(g: Graph) -> Graph:
                 continue  # only the activation operand; biased matmul not linear
             mm_out = mm.outputs[0]
             new_out = g.fresh_name(mm_out + "_prescale")
-            mm.inputs[0] = node.inputs[0]
-            mm.outputs[0] = new_out
-            node.inputs[0] = new_out
-            node.outputs[0] = mm_out
-            g.nodes.remove(node)
-            g.nodes.insert(g.nodes.index(mm) + 1, node)
+            g.set_input(mm, 0, node.inputs[0])
+            g.set_output(mm, 0, new_out)
+            g.set_input(node, 0, new_out)
+            g.set_output(node, 0, mm_out)
+            g.remove_node(node)
+            g.insert_after(mm, node)
             changed = True
             break
     g.toposort()
@@ -220,8 +231,8 @@ def FoldMulIntoMultiThreshold(g: Graph) -> Graph:
             tname = mt.inputs[1]
             g.initializers[tname] = (np.asarray(g.initializers[tname]) / c
                                      ).astype(np.float32)
-            mt.inputs[0] = node.inputs[0]
-            g.nodes.remove(node)
+            g.set_input(mt, 0, node.inputs[0])
+            g.remove_node(node)
             changed = True
             break
     g.toposort()
@@ -251,7 +262,10 @@ def FuseMatMulThresholdToMVAU(g: Graph) -> Graph:
             if len(consumers) != 1 or consumers[0].op != "multithreshold":
                 continue
             mt = consumers[0]
-            if mt.attrs.get("channel_axis", 1) not in (-1,):
+            # missing channel_axis means trailing (the interpreter's default
+            # in _ex_multithreshold) — keep the fuse gate consistent with
+            # execution semantics and the trailing_axis_thresholds predicate
+            if mt.attrs.get("channel_axis", -1) not in (-1,):
                 continue
             fused = Node(
                 "mvau",
@@ -261,9 +275,9 @@ def FuseMatMulThresholdToMVAU(g: Graph) -> Graph:
                  if k in mt.attrs},
             )
             i = g.nodes.index(node)
-            g.nodes.remove(node)
-            g.nodes.remove(mt)
-            g.nodes.insert(i, fused)
+            g.remove_node(node)
+            g.remove_node(mt)
+            g.insert_node(i, fused)
             changed = True
             break
     g.toposort()

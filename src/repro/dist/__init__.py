@@ -1,0 +1,27 @@
+"""Distribution substrate: activation-sharding rules, param/batch/opt/cache
+sharding trees, gradient compression (error feedback), pipeline parallelism,
+and the straggler policy.
+
+Everything here is single-host-correct and backed by ``jax.sharding``: the
+same code paths run on a 1-device CPU (where every sharding degenerates to
+replication), on the subprocess debug meshes the multi-device tests force via
+``XLA_FLAGS``, and on a real pod slice.  Numerics never depend on the mesh —
+shardings only pick layouts; GSPMD inserts the collectives.
+"""
+
+from repro.dist import act_sharding  # noqa: F401
+from repro.dist.compression import (  # noqa: F401
+    compress_int8,
+    decompress_int8,
+    ef_compress_tree,
+    init_residuals,
+)
+from repro.dist.sharding import (  # noqa: F401
+    set_fsdp_axes,
+    set_moe_expert_axis,
+    tree_batch_shardings,
+    tree_cache_shardings,
+    tree_opt_shardings,
+    tree_param_shardings,
+)
+from repro.dist.straggler import StragglerMonitor  # noqa: F401

@@ -1,0 +1,59 @@
+"""Named activation-sharding constraint points.
+
+Model code marks semantically meaningful tensors (``constrain(x, "residual")``,
+``constrain(q, "attn_q_rows")``) without knowing anything about meshes.  The
+launcher binds names to :class:`jax.sharding.NamedSharding` rules for the
+duration of a trace (``with act_sharding.rules({...}): ...``); unbound names
+are free — the constraint is the identity.  This keeps the models importable
+and runnable on one device while letting the dry-run sweep sharding variants
+(sequence parallel, head sharding, EP dispatch homes) by swapping rule dicts,
+never touching model code.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Iterator, Optional
+
+import jax
+
+_state = threading.local()
+
+
+def _current() -> Dict[str, object]:
+    return getattr(_state, "rules", None) or {}
+
+
+@contextlib.contextmanager
+def rules(rule_map: Dict[str, object]) -> Iterator[None]:
+    """Bind ``name -> NamedSharding`` rules for the enclosed trace/compile."""
+    prev = getattr(_state, "rules", None)
+    merged = dict(prev or {})
+    merged.update(rule_map)
+    _state.rules = merged
+    try:
+        yield
+    finally:
+        _state.rules = prev
+
+
+def get_rule(name: str) -> Optional[object]:
+    return _current().get(name)
+
+
+def constrain(x: jax.Array, name: str) -> jax.Array:
+    """Apply the sharding rule bound to ``name``, if any.
+
+    A rule whose PartitionSpec rank exceeds the tensor rank is skipped rather
+    than raised: the same constraint point is reused across code paths with
+    different ranks (e.g. decode vs prefill), and a layout hint must never be
+    able to break numerics or tracing.
+    """
+    rule = _current().get(name)
+    if rule is None:
+        return x
+    spec = getattr(rule, "spec", None)
+    if spec is not None and len(spec) > getattr(x, "ndim", 0):
+        return x
+    return jax.lax.with_sharding_constraint(x, rule)

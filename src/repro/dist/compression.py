@@ -1,0 +1,58 @@
+"""int8 gradient compression with error feedback (EF-SGD).
+
+Used at the pod boundary of the multi-pod train step (launch/steps.py):
+gradients are quantized to int8 before the slow cross-pod hop; the
+quantization error accumulates in a residual that is re-injected into the
+next step's gradient, so the RUNNING SUM of transmitted gradients tracks the
+running sum of true gradients — the standard error-feedback guarantee
+(property-tested in tests/test_substrate.py).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization: returns (codes, scale).
+
+    ``|decompress(codes, scale) - g| <= scale / 2`` elementwise (round to
+    nearest on a uniform grid).
+    """
+    g = jnp.asarray(g, jnp.float32)
+    amax = jnp.max(jnp.abs(g))
+    scale = jnp.maximum(amax / 127.0, 1e-12)
+    codes = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def decompress_int8(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+def init_residuals(grads: Any) -> Any:
+    """Zero residual tree matching a gradient pytree."""
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress_tree(grads: Any, residuals: Any) -> Tuple[Any, Any]:
+    """Error-feedback compression over a pytree.
+
+    Each leaf transmits ``C(g + r)`` (quantize-dequantize) and carries the
+    error ``(g + r) - C(g + r)`` into the next step's residual.
+    """
+
+    def leaf(g, r):
+        target = jnp.asarray(g, jnp.float32) + r
+        codes, scale = compress_int8(target)
+        sent = decompress_int8(codes, scale)
+        return sent.astype(g.dtype), target - sent
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    r_leaves = jax.tree.leaves(residuals)
+    pairs = [leaf(g, r) for g, r in zip(g_leaves, r_leaves)]
+    return (jax.tree.unflatten(treedef, [p[0] for p in pairs]),
+            jax.tree.unflatten(treedef, [p[1] for p in pairs]))

@@ -1,0 +1,144 @@
+"""Sharding-tree construction: map param/opt/batch/cache pytrees to
+:class:`jax.sharding.NamedSharding` trees for a given mesh.
+
+Policy (shape-driven, path-free — works for every arch in ``models/``):
+
+* **Params** (ndim >= 2): the trailing (output-feature) dim shards over the
+  ``"model"`` axis — tensor parallelism for every matmul; the second-to-last
+  (input-feature) dim shards over the configured FSDP axes (ZeRO-3-style
+  weight sharding, gathered per-layer by GSPMD).  3-D+ leaves (MoE expert
+  banks ``(E, d, f)``, stacked layer params) additionally shard their leading
+  dim over the expert axis.  A dim only shards when its size divides the axis
+  size, and a mesh axis is never used twice in one spec — otherwise the dim
+  stays replicated.  Vectors and scalars (norm gains, biases) replicate.
+* **Opt moments**: same layout as the params they mirror (ZeRO-1: moments
+  live wherever the grads land after the reduce-scatter).
+* **Batch**: the microbatch dim shards over the data axes — dim 1 for
+  pre-microbatched ``(n_micro, mb, ...)`` train tensors, dim 0 for serving
+  ``(B, ...)`` tensors.
+* **Cache**: decode caches carry a leading layer axis; the batch dim (dim 1)
+  shards over data, everything else replicates.
+
+Correctness never depends on these choices — GSPMD inserts the matching
+collectives — so the policy is tuned for the common case and degrades to
+replication, not errors, on odd shapes.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "set_fsdp_axes",
+    "set_moe_expert_axis",
+    "tree_param_shardings",
+    "tree_opt_shardings",
+    "tree_batch_shardings",
+    "tree_cache_shardings",
+]
+
+# Module-level policy knobs, set by the launcher before building shardings
+# (see launch/dryrun.py): which mesh axes FSDP-shard the input-feature dim,
+# and which axis is "home" for MoE expert banks.
+_FSDP_AXES: Tuple[str, ...] = ("data",)
+_EXPERT_AXIS: str = "data"
+
+
+def set_fsdp_axes(axes: Sequence[str]) -> None:
+    global _FSDP_AXES
+    _FSDP_AXES = tuple(axes)
+
+
+def set_moe_expert_axis(axis: str) -> None:
+    global _EXPERT_AXIS
+    _EXPERT_AXIS = axis
+
+
+def _axes_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    return math.prod(mesh.shape[a] for a in axes)
+
+
+def _present(mesh: Mesh, axes: Sequence[str]) -> Tuple[str, ...]:
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def _shape_of(leaf: Any) -> Tuple[int, ...]:
+    return tuple(getattr(leaf, "shape", ()) or ())
+
+
+def _param_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    ndim = len(shape)
+    spec: list = [None] * ndim
+    used: set = set()
+
+    def try_assign(dim: int, axes: Tuple[str, ...]) -> None:
+        axes = tuple(a for a in axes if a not in used)
+        if not axes or spec[dim] is not None:
+            return
+        if shape[dim] % _axes_size(mesh, axes) != 0 or shape[dim] == 0:
+            return
+        spec[dim] = axes if len(axes) > 1 else axes[0]
+        used.update(axes)
+
+    if ndim >= 2:
+        try_assign(ndim - 1, _present(mesh, ("model",)))
+        try_assign(ndim - 2, _present(mesh, _FSDP_AXES))
+    if ndim >= 3:
+        try_assign(0, _present(mesh, (_EXPERT_AXIS,)))
+    return P(*spec)
+
+
+def tree_param_shardings(params: Any, mesh: Mesh) -> Any:
+    """NamedSharding tree mirroring a parameter pytree (TP + FSDP layout)."""
+    return jax.tree.map(
+        lambda p: NamedSharding(mesh, _param_spec(_shape_of(p), mesh)), params)
+
+
+def tree_opt_shardings(params: Any, mesh: Mesh) -> Any:
+    """Moment shardings — co-located with the params they track (ZeRO-1)."""
+    return tree_param_shardings(params, mesh)
+
+
+def _batch_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    data_axes = _present(mesh, ("pod", "data"))
+    ndim = len(shape)
+    if not data_axes or ndim == 0:
+        return P()
+    # pre-microbatched (n_micro, mb, ...) shards mb; serving (B, ...) shards B
+    dim = 1 if ndim >= 3 else 0
+    for axes in (data_axes, data_axes[-1:]):
+        if shape[dim] > 0 and shape[dim] % _axes_size(mesh, axes) == 0:
+            spec = [None] * ndim
+            spec[dim] = axes if len(axes) > 1 else axes[0]
+            return P(*spec)
+    return P()
+
+
+def tree_batch_shardings(batch: Any, mesh: Mesh) -> Any:
+    """Data-parallel shardings for a batch pytree."""
+    return jax.tree.map(
+        lambda b: NamedSharding(mesh, _batch_spec(_shape_of(b), mesh)), batch)
+
+
+def _cache_spec(shape: Tuple[int, ...], mesh: Mesh) -> P:
+    data_axes = _present(mesh, ("pod", "data"))
+    ndim = len(shape)
+    # leaves carry a leading layer axis: (L, B, ...); "len" counters are (L,)
+    if ndim < 2 or not data_axes:
+        return P()
+    for axes in (data_axes, data_axes[-1:]):
+        if shape[1] > 0 and shape[1] % _axes_size(mesh, axes) == 0:
+            spec = [None] * ndim
+            spec[1] = axes if len(axes) > 1 else axes[0]
+            return P(*spec)
+    return P()
+
+
+def tree_cache_shardings(cache: Any, mesh: Mesh) -> Any:
+    """Decode-cache shardings: batch dim (after the layer axis) over data."""
+    return jax.tree.map(
+        lambda c: NamedSharding(mesh, _cache_spec(_shape_of(c), mesh)), cache)

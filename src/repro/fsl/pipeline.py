@@ -38,6 +38,31 @@ class FSLPipeline:
             f = f + resnet9.forward(params, x[:, :, ::-1], self.qcfg, self.width)
         return f
 
+    def deploy(self, params):
+        """Compile the backbone into a :class:`repro.DeployedModel` and
+        return a feature function numerically identical to :meth:`features`
+        — the deployed-accuracy contract: the SAME bit-width grid drives QAT
+        and the compiled HW graph, so episode accuracy measured through this
+        path IS the deployed accuracy.
+        """
+        from repro.core.deploy import compile as compile_graph
+        from repro.core.quant import fake_quant
+
+        if self.qcfg is None:
+            raise ValueError("deploy() needs a QuantConfig: the compiled "
+                             "graph bakes thresholds for a specific grid")
+        dm = compile_graph(params, self.qcfg, recipe="resnet9")
+
+        def feats(x: jax.Array) -> jax.Array:
+            xq = fake_quant(x, self.qcfg.act)   # graph input contract: on-grid
+            f = dm(xq)
+            if self.easy_augment:
+                f = f + dm(fake_quant(x[:, :, ::-1], self.qcfg.act))
+            return f
+
+        feats.deployed_model = dm
+        return feats
+
 
 def pretrain_backbone(data: SyntheticImages, pipe: FSLPipeline, steps: int = 150,
                       batch: int = 64, lr: float = 2e-3, seed: int = 0,
@@ -77,9 +102,15 @@ def pretrain_backbone(data: SyntheticImages, pipe: FSLPipeline, steps: int = 150
 
 
 def evaluate_episodes(backbone_params, data: SyntheticImages, pipe: FSLPipeline,
-                      n_episodes: int = 20, seed: int = 100) -> Tuple[float, float]:
-    """Mean ± 95% CI accuracy over novel-class episodes (paper Table II)."""
-    feats = jax.jit(lambda x: pipe.features(backbone_params, x))
+                      n_episodes: int = 20, seed: int = 100,
+                      feats_fn=None) -> Tuple[float, float]:
+    """Mean ± 95% CI accuracy over novel-class episodes (paper Table II).
+
+    ``feats_fn`` overrides the feature extractor — pass ``pipe.deploy(params)``
+    to score episodes through the compiled DeployedModel instead of the QAT
+    forward (identical numbers, deployed datapath).
+    """
+    feats = feats_fn or jax.jit(lambda x: pipe.features(backbone_params, x))
     rng = np.random.default_rng(seed)
     accs = []
     for _ in range(n_episodes):

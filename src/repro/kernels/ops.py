@@ -14,11 +14,13 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.quant import FixedPointSpec
+from repro.kernels import ref
 from repro.kernels.gap import gap_pallas
 from repro.kernels.mvau import mvau_pallas
 from repro.kernels.qmatmul import qmatmul_pallas
 
-__all__ = ["mvau", "mvau_int", "qmatmul", "gap", "default_interpret"]
+__all__ = ["mvau", "mvau_int", "qmatmul", "gap", "default_interpret",
+           "graph_op_impls"]
 
 
 def default_interpret() -> bool:
@@ -77,3 +79,39 @@ def gap(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
     """GlobalAccPool spatial sum (N, H, W, C) -> (N, C)."""
     interpret = default_interpret() if interpret is None else interpret
     return gap_pallas(x, interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Graph-node lowering (core.deploy dispatches HW ops onto these kernels)
+# ---------------------------------------------------------------------------
+def graph_op_impls(interpret: Optional[bool] = None):
+    """Executors for the HW graph ops, keyed by op name.
+
+    ``core.deploy`` overlays these on the interpreter's executor table when
+    lowering a streamlined graph to the single jitted ``DeployedModel``
+    callable, so the backend decision is made once per compile (not re-read
+    from node attrs on every call).  On TPU the Pallas MVAU/GAP kernels
+    dispatch compiled; off-TPU — where Pallas only *emulates* via interpret
+    mode — nodes lower to the XLA-native oracles from :mod:`ref` instead.
+    Both paths are bit-identical on the fixed-point grid (every operand and
+    partial sum is exactly representable; asserted kernel-vs-oracle in
+    tests/test_kernels.py and compiled-vs-interpreter in
+    tests/test_compile.py).
+    """
+    emulated = default_interpret() if interpret is None else interpret
+
+    def _mvau_node(node, x, w, t):
+        kw = dict(out_base=node.attrs.get("out_base", 0),
+                  out_scale=node.attrs.get("out_scale", 1.0),
+                  out_bias=node.attrs.get("out_bias", 0.0))
+        if emulated:
+            return ref.mvau(x.astype(jnp.float32), w, jnp.asarray(t), **kw)
+        return mvau(x, w, t, interpret=False, **kw)
+
+    def _gap_node(node, x):
+        axes = tuple(node.attrs["axes"])
+        if x.ndim == 4 and axes == (1, 2):
+            return ref.gap(x) if emulated else gap(x, interpret=False)
+        return jnp.sum(x, axis=axes)
+
+    return {"mvau": _mvau_node, "global_acc_pool": _gap_node}

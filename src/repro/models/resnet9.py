@@ -195,3 +195,37 @@ def export_graph(params: Params, qcfg: QuantConfig, width: int = 64,
     nodes.append(Node("reduce_mean", [src], ["features"],
                       {"axes": [1, 2], "spatial_size": hw * hw}))
     return Graph(nodes, ["x"], ["features"], inits, name="resnet9")
+
+
+# ---------------------------------------------------------------------------
+# Build recipe — registered HERE so new backbones plug into repro.compile()
+# without touching repro/core (paper Sec. III-A: step lists belong to the
+# architecture, not the framework).
+# ---------------------------------------------------------------------------
+def _export_for_compile(params: Params, qcfg: QuantConfig, img: int = 32) -> Graph:
+    """Recipe exporter: infer width from the param tree, export the graph."""
+    if qcfg is None:
+        raise ValueError("repro.compile(resnet9_params, qcfg): qcfg is "
+                         "required to place thresholds on the bit-width grid")
+    width = int(np.shape(params["c0"]["w"])[-1])
+    return export_graph(params, qcfg, width=width, img=img)
+
+
+def _register_recipe():
+    from repro.core.recipes import register_recipe
+
+    register_recipe(
+        "resnet9",
+        ["convert_reduce_mean_to_gap",
+         "absorb_transpose_into_multithreshold",
+         "cancel_transpose_pairs",
+         "move_mul_past_matmul",
+         "collapse_repeated_mul",
+         "fold_mul_into_multithreshold",
+         "fuse_matmul_threshold_to_mvau",
+         "verify_hw_mappable"],
+        description="paper's customized ResNet-9 flow (Sec. III-C/D fixes)",
+        exporter=_export_for_compile)
+
+
+_register_recipe()

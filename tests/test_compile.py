@@ -1,0 +1,260 @@
+"""The compiler API contract (ISSUE 1 acceptance):
+
+* ``repro.compile()`` on ResNet-9 == ``resnet9.forward`` at ``paper_w6a4``;
+* ``DeployedModel`` output == interpreter ``execute`` output bit-for-bit;
+* the PassManager rejects a recipe fusing MVAU before transpose absorption
+  (static order check AND runtime structural precondition);
+* golden-IO per-pass verification catches a semantics-breaking pass;
+* recipes/passes are a registry new architectures extend without core edits.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro
+from repro.core import quant
+from repro.core.build import RESNET9_BUILD_STEPS, build_dataflow
+from repro.core.graph import Graph, GraphBuildError, Node, execute
+from repro.core.passes import (
+    PASS_REGISTRY,
+    PassManager,
+    PassOrderError,
+    PassVerificationError,
+    register_pass,
+)
+from repro.core.recipes import recipe
+from repro.models import resnet9
+
+WIDTH = 8
+QCFG = quant.QuantConfig.paper_w6a4()
+
+
+@pytest.fixture(scope="module")
+def setup():
+    params = resnet9.init_params(jax.random.PRNGKey(0), width=WIDTH)
+    x = jax.random.uniform(jax.random.PRNGKey(1), (2, 32, 32, 3),
+                           jnp.float32, 0.0, 1.0)
+    x_q = quant.fake_quant(x, QCFG.act)
+    return params, x, x_q
+
+
+# ---------------------------------------------------------------------------
+# repro.compile() — the DeployedModel artifact
+# ---------------------------------------------------------------------------
+def test_compile_matches_forward(setup):
+    """compile(params) end-to-end equals the QAT forward at paper_w6a4."""
+    params, x, x_q = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9")
+    got = dm(x_q)
+    want = resnet9.forward(params, x, QCFG, width=WIDTH)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_deployed_model_bit_for_bit_vs_interpreter(setup):
+    """The jitted single-program artifact reproduces the per-node
+    interpreter exactly — fusion/ordering must not perturb on-grid math."""
+    params, _, x_q = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    dm = repro.compile(g, recipe="resnet9")
+    hw = build_dataflow(g, RESNET9_BUILD_STEPS)
+    interp = execute(hw, {"x": x_q})[0]
+    np.testing.assert_array_equal(np.asarray(dm(x_q)), np.asarray(interp))
+
+
+def test_compile_accepts_graph_and_params(setup):
+    params, _, x_q = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    dm_g = repro.compile(g, recipe="resnet9")
+    dm_p = repro.compile(params, QCFG, recipe="resnet9")
+    np.testing.assert_array_equal(np.asarray(dm_g(x_q)), np.asarray(dm_p(x_q)))
+
+
+def test_compile_with_golden_io_verification(setup):
+    """sample_input turns on FINN-style per-pass verification; on the exact
+    fixed-point grid every pass must be 0-error."""
+    params, _, x_q = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9",
+                       sample_input=np.asarray(x_q))
+    assert all(r.verified for r in dm.trace.records)
+    assert all(r.max_abs_err == 0.0 for r in dm.trace.records)
+    assert "io-verified" in dm.report()
+
+
+def test_deployed_model_vmap_composes(setup):
+    """dm.apply is a pure function: vmap over an extra leading axis works."""
+    params, _, x_q = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9")
+    stacked = jnp.stack([x_q, x_q[::-1]])
+    got = jax.vmap(lambda xs: dm.apply(xs)[0])(stacked)
+    np.testing.assert_array_equal(np.asarray(got[0]), np.asarray(dm(x_q)))
+    np.testing.assert_array_equal(np.asarray(got[1]), np.asarray(dm(x_q[::-1])))
+
+
+def test_deployed_model_structure(setup):
+    params, _, _ = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9")
+    ops = dm.op_counts()
+    assert ops.get("mvau", 0) == 8          # every conv fused
+    assert ops.get("global_acc_pool") == 1  # reduce_mean eliminated
+    assert "reduce_mean" not in ops
+    assert "multithreshold" not in ops
+
+
+# ---------------------------------------------------------------------------
+# PassManager ordering checks (the paper's Fig. 4 bug, made a hard error)
+# ---------------------------------------------------------------------------
+def test_recipe_order_statically_rejected(setup):
+    """Fuse listed before absorb in the SAME recipe: rejected before any
+    pass runs — the ordering can never be right."""
+    params, _, _ = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    with pytest.raises(PassOrderError, match="requires"):
+        PassManager().run(g, ["fuse_matmul_threshold_to_mvau",
+                              "absorb_transpose_into_multithreshold"])
+
+
+def test_fuse_precondition_rejected_at_runtime(setup):
+    """Fuse on a graph whose thresholds are not trailing-axis yet: the
+    structural precondition fails even though no later pass establishes it."""
+    params, _, _ = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    with pytest.raises(PassOrderError, match="trailing_axis_thresholds"):
+        PassManager().run(g, ["fuse_matmul_threshold_to_mvau"])
+    # and via the legacy raw-callable surface (resolved by fn identity)
+    with pytest.raises(GraphBuildError):
+        g.transform("fuse_matmul_threshold_to_mvau")
+
+
+def test_mlp_recipe_still_builds_mlps():
+    """The tutorial recipe stays valid on its own architecture."""
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(16, 8)).astype(np.float32)
+    t = np.sort(rng.normal(size=(8, 7)).astype(np.float32), axis=1)
+    g = Graph([Node("mul", ["x"], ["sx"], {"value": 0.5}),
+               Node("matmul", ["sx", "w"], ["mm"]),
+               Node("multithreshold", ["mm", "t"], ["y"],
+                    {"channel_axis": -1, "out_base": 0})],
+              ["x"], ["y"], {"w": w, "t": t}, name="mlp")
+    x = rng.normal(size=(4, 16)).astype(np.float32)
+    want = execute(g, {"x": jnp.asarray(x)})[0]
+    res = PassManager().run(g, recipe("mlp").passes,
+                            verify_feeds={"x": jnp.asarray(x)})
+    assert any(n.op == "mvau" for n in res.graph.nodes)
+    got = execute(res.graph, {"x": jnp.asarray(x)})[0]
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_golden_io_catches_broken_pass(setup):
+    """A semantics-breaking rewrite fails per-pass verification loudly."""
+    params, _, x_q = setup
+
+    def BreakScales(g):
+        g = g.copy()
+        for node in g.nodes:
+            if node.op == "mul" and "value" in node.attrs:
+                node.attrs["value"] = float(node.attrs["value"]) * 2.0
+        g.invalidate()
+        return g
+
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    g = g.transform("convert_reduce_mean_to_gap")   # introduces a mul
+    with pytest.raises(PassVerificationError, match="changed graph semantics"):
+        PassManager().run(g, [BreakScales], verify_feeds={"x": x_q})
+
+
+def test_pass_trace_reports_rewrites(setup):
+    params, _, _ = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9")
+    by_name = {r.name: r for r in dm.trace.records}
+    assert by_name["cancel_transpose_pairs"].op_delta.get("transpose", 0) <= -8
+    assert by_name["fuse_matmul_threshold_to_mvau"].op_delta["mvau"] == 8
+    assert by_name["convert_reduce_mean_to_gap"].op_delta["reduce_mean"] == -1
+    assert dm.trace.total_s > 0
+
+
+# ---------------------------------------------------------------------------
+# Registries are extension points
+# ---------------------------------------------------------------------------
+def test_unknown_recipe_lists_available():
+    with pytest.raises(KeyError, match="resnet9"):
+        recipe("definitely-not-registered")
+
+
+def test_register_custom_pass_and_recipe():
+    name = "_test_identity_pass"
+    if name not in PASS_REGISTRY:
+        register_pass(name, lambda g: g.copy(), description="test no-op")
+    r = repro.register_recipe("_test_recipe", [name, "verify_hw_mappable"])
+    g = Graph([Node("mul", ["x"], ["y"], {"value": 2.0})], ["x"], ["y"], {},
+              name="tiny")
+    dm = repro.compile(g, recipe=r)
+    np.testing.assert_allclose(np.asarray(dm(jnp.ones((3,)))), 2 * np.ones(3))
+
+
+def test_recipe_rejects_unknown_pass_names():
+    with pytest.raises(KeyError, match="unknown pass"):
+        repro.register_recipe("_bad_recipe", ["no_such_pass"])
+
+
+# ---------------------------------------------------------------------------
+# Graph index correctness (the O(n²) fix must not change query semantics)
+# ---------------------------------------------------------------------------
+def test_cached_index_matches_linear_scan(setup):
+    from repro.core import graph as G
+    params, _, _ = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    tensors = sorted({t for n in g.nodes for t in n.inputs + n.outputs})
+    try:
+        for t in tensors:
+            G.set_index_enabled(True)
+            g.invalidate()
+            fast_p, fast_c = g.producer(t), g.consumers(t)
+            G.set_index_enabled(False)
+            slow_p, slow_c = g.producer(t), g.consumers(t)
+            assert fast_p is slow_p
+            assert fast_c == slow_c
+    finally:
+        G.set_index_enabled(True)
+
+
+def test_consumers_dedup_on_repeated_input():
+    """A node reading the same tensor twice is one consumer, index or not."""
+    from repro.core import graph as G
+    g = Graph([Node("add", ["t", "t"], ["y"])], ["t"], ["y"], {})
+    try:
+        G.set_index_enabled(True)
+        g.invalidate()
+        fast = g.consumers("t")
+        G.set_index_enabled(False)
+        slow = g.consumers("t")
+    finally:
+        G.set_index_enabled(True)
+    assert len(fast) == len(slow) == 1
+
+
+def test_compile_does_not_mutate_input_graph(setup):
+    """Value semantics: the caller's exported graph survives compile()."""
+    params, _, _ = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    ops_before = [n.op for n in g.nodes]
+    repro.compile(g, recipe="resnet9")
+    assert [n.op for n in g.nodes] == ops_before
+    assert "reduce_mean" in ops_before
+
+
+def test_shape_inference_annotations(setup):
+    params, _, x_q = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    for n in g.nodes:
+        n.attrs.pop("spatial_size", None)   # strip the exporter's hint
+    g.invalidate()
+    with pytest.raises(GraphBuildError, match="shape_inference"):
+        g.transform("convert_reduce_mean_to_gap")
+    g.infer_shapes({"x": x_q})
+    assert g.shapes["features"] == (2, resnet9.feature_dim(WIDTH))
+    g2 = g.transform("convert_reduce_mean_to_gap")
+    assert not any(n.op == "reduce_mean" for n in g2.nodes)

@@ -43,7 +43,10 @@ def test_fsl_pretraining_improves_over_random():
     from repro.models import resnet9
     rand_params = resnet9.init_params(jr.PRNGKey(9), 8)
     acc_rand, _ = evaluate_episodes(rand_params, data, pipe, n_episodes=6)
-    out = pretrain_backbone(data, pipe, steps=60, batch=32)
+    # 240 steps: the quantized backbone sits on a ~150-step loss plateau
+    # before descending (STE warm-up); 60 steps never left it, so the seed
+    # version of this test asserted on optimizer noise.
+    out = pretrain_backbone(data, pipe, steps=240, batch=32)
     acc_trained, _ = evaluate_episodes(out["params"], data, pipe, n_episodes=6)
     assert out["losses"][-1] < out["losses"][0], "pretraining loss must drop"
     assert acc_trained >= acc_rand - 0.05, \

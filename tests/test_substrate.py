@@ -145,6 +145,20 @@ def test_error_feedback_unbiased_over_time():
     assert gap < 0.01  # far below the signal magnitude (~0.07)
 
 
+def test_ef_compress_tuple_pytree():
+    """Containers that are themselves tuples must not confuse the
+    (sent, residual) split (regression: is_leaf=tuple misfired here)."""
+    g = (jnp.full((8,), 0.25), {"w": jnp.full((4,), -0.5)})
+    res = init_residuals(g)
+    sent, new_res = ef_compress_tree(g, res)
+    assert jax.tree.structure(sent) == jax.tree.structure(g)
+    assert jax.tree.structure(new_res) == jax.tree.structure(g)
+    np.testing.assert_allclose(np.asarray(sent[0]), 0.25, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(sent[1]["w"]), -0.5, atol=4e-3)
+    for leaf in jax.tree.leaves(new_res):
+        assert float(jnp.abs(leaf).max()) < 4e-3
+
+
 # ---------------------------------------------------------------------------
 # straggler monitor
 # ---------------------------------------------------------------------------

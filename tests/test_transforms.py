@@ -4,6 +4,9 @@ paper's two headline rewrites on the exact patterns from Fig. 4 / Sec. III-D."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install hypothesis — see pyproject.toml [dev])")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import quant
