@@ -2,13 +2,22 @@
 
 Prints ``name,metric,value`` CSV lines. ``--quick`` trims iteration counts
 (used by the test suite); full runs reproduce EXPERIMENTS.md §Paper-validation.
+
+The compile benchmark additionally serializes to ``BENCH_pr2.json`` at the
+repo root (interpreter vs f32 artifact vs int artifact latency, weight
+bytes per bit-width config) — the machine-readable perf trajectory
+successive PRs diff against.
 """
 
 from __future__ import annotations
 
 import argparse
-import sys
+import json
+import os
+import tempfile
 import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
 def main(argv=None) -> None:
@@ -16,6 +25,11 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table2,table3,fig5,roofline,compile")
+    ap.add_argument("--bench-json", default=None,
+                    help="where the compile benchmark dict is written "
+                         "(default: repo-root BENCH_pr2.json for full runs; "
+                         "--quick runs go to the system temp dir so they "
+                         "never clobber the committed trajectory file)")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else set()
 
@@ -33,8 +47,20 @@ def main(argv=None) -> None:
         from benchmarks import fig5_pipeline
         fig5_pipeline.run(quick=args.quick)
     if want("compile"):
+        import jax
+
         from benchmarks import compile_bench
-        compile_bench.run(quick=args.quick)
+        results = compile_bench.run(quick=args.quick)
+        path = args.bench_json
+        if path is None:
+            path = (os.path.join(tempfile.gettempdir(), "BENCH_pr2.quick.json")
+                    if args.quick
+                    else os.path.join(_REPO_ROOT, "BENCH_pr2.json"))
+        payload = {"benchmark": "compile", "quick": bool(args.quick),
+                   "backend": jax.default_backend(), "metrics": results}
+        with open(path, "w") as f:
+            json.dump(payload, f, indent=2, sort_keys=True)
+        print(f"compile,bench_json,{path}")
     if want("roofline"):
         from benchmarks import roofline
         try:

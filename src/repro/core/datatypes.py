@@ -1,0 +1,448 @@
+"""Per-tensor datatype inference + integer-datapath lowering.
+
+FINN's build flow hangs every tensor with a ``DataType`` annotation and
+re-runs ``InferDataTypes`` after each transformation — bit-width is a
+*propagated graph property*, not a configuration convention.  This module
+ports that backbone: :func:`InferDataTypes` walks the graph in topological
+order applying per-op width-propagation rules (the registry
+``DATATYPE_RULES``), and :func:`LowerToIntegerDatapath` uses the resulting
+annotations to rewrite the float-emulated HW graph into the integer
+datapath proper — quantized inputs, integer weight codes at the narrowest
+storage dtype, integer threshold tables, ``mvau_int`` nodes — bit-for-bit
+equal to the f32 emulation on the fixed-point grid.
+
+Width-propagation rules (paper / FINN accumulator arithmetic):
+
+=================  ==========================================================
+``matmul``         accumulator: ``w_bits + a_bits + ceil(log2 K)`` signed-if-
+                   either, ``frac = a_frac + w_frac`` (:func:`accumulator_spec`)
+``multithreshold`` output: ``ceil(log2(L+1))`` unsigned (L thresholds), frac
+``mvau``           from ``out_scale = 2^-frac`` (:func:`threshold_output_spec`)
+``global_acc_pool``sum: ``in_bits + ceil(log2(H*W))``, same frac/signedness
+``add``            ``max(bits) + 1`` at a common frac
+``mul``            power-of-two scalar shifts ``frac``; anything else leaves
+                   the fixed-point grid → annotation becomes None (float)
+``transpose`` &c.  data movement preserves the spec
+=================  ==========================================================
+
+Both passes are registered with the PassManager (``infer_datatypes``,
+``lower_to_integer_datapath``); the lowering *requires* the
+``datatypes_annotated`` structural property, so a recipe that skips
+inference fails with :class:`~repro.core.passes.PassOrderError` instead of
+silently mis-lowering — the same ordering discipline the streamline passes
+get.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import quant
+from repro.core.graph import Graph, GraphBuildError, Node
+from repro.core.quant import FixedPointSpec
+
+__all__ = [
+    "DATATYPE_RULES",
+    "accumulator_spec",
+    "threshold_output_spec",
+    "datatype_rule",
+    "InferDataTypes",
+    "LowerToIntegerDatapath",
+]
+
+
+# ---------------------------------------------------------------------------
+# Spec arithmetic
+# ---------------------------------------------------------------------------
+def accumulator_spec(x_spec: FixedPointSpec, w_spec: FixedPointSpec,
+                     k: int) -> FixedPointSpec:
+    """MatMul/MVAU accumulator format: ``w_bits + a_bits + ceil(log2 K)``.
+
+    This is FINN's conservative accumulator sizing: the widest partial sum of
+    K products of a ``w_bits`` × ``a_bits`` code pair.  The fractional point
+    of a product is the sum of the operand fractions.  (Module-level
+    function on purpose: the lowering resolves it through the module at call
+    time, so tests can inject a wrong-width rule and watch golden-IO
+    verification catch it.)
+    """
+    growth = max(int(math.ceil(math.log2(max(k, 1)))), 0)
+    return FixedPointSpec(
+        total_bits=x_spec.total_bits + w_spec.total_bits + growth,
+        frac_bits=x_spec.frac_bits + w_spec.frac_bits,
+        signed=x_spec.signed or w_spec.signed)
+
+
+def threshold_output_spec(n_levels: int, out_base: int = 0,
+                          out_scale: float = 1.0,
+                          out_bias: float = 0.0) -> Optional[FixedPointSpec]:
+    """MultiThreshold/MVAU output format: codes in ``[base, base + L]``.
+
+    For the common FINN case (base 0) that is ``ceil(log2(L+1))`` unsigned.
+    ``out_scale`` must be an exact power of two (it *is* the code scale);
+    otherwise the output is off-grid and the spec is None.
+    """
+    if out_bias != 0.0 or out_scale <= 0.0:
+        return None
+    frac = -math.log2(out_scale)
+    if abs(frac - round(frac)) > 1e-9:
+        return None
+    frac = int(round(frac))
+    lo, hi = int(out_base), int(out_base) + int(n_levels)
+    if lo >= 0:
+        bits = max(int(math.ceil(math.log2(hi + 1))) if hi > 0 else 1, 1)
+        return FixedPointSpec(bits, frac, signed=False)
+    bits = 1 + max(int(math.ceil(math.log2(max(-lo, hi + 1)))), 1)
+    return FixedPointSpec(bits, frac, signed=True)
+
+
+def _spec_for_levels(g: Graph, tensor: str) -> Optional[int]:
+    """Number of threshold levels L for a threshold tensor, if resolvable."""
+    if tensor in g.initializers:
+        return int(np.asarray(g.initializers[tensor]).shape[-1])
+    if tensor in g.shapes:
+        return int(g.shapes[tensor][-1])
+    return None
+
+
+def _inner_dim(g: Graph, w_tensor: str) -> Optional[int]:
+    if w_tensor in g.initializers:
+        return int(np.asarray(g.initializers[w_tensor]).shape[0])
+    if w_tensor in g.shapes:
+        return int(g.shapes[w_tensor][0])
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Per-op rules: fn(node, in_specs, graph) -> spec-or-None for all outputs
+# ---------------------------------------------------------------------------
+Rule = Callable[[Node, List[Optional[FixedPointSpec]], Graph],
+                Optional[FixedPointSpec]]
+
+DATATYPE_RULES: Dict[str, Rule] = {}
+
+
+def datatype_rule(*ops: str):
+    def deco(fn: Rule) -> Rule:
+        for op in ops:
+            DATATYPE_RULES[op] = fn
+        return fn
+    return deco
+
+
+@datatype_rule("im2col", "transpose", "maxpool", "flatten", "relu")
+def _rule_passthrough(node, in_specs, g):
+    """Data movement / monotone selection: same grid in, same grid out."""
+    return in_specs[0]
+
+
+@datatype_rule("matmul")
+def _rule_matmul(node, in_specs, g):
+    if len(node.inputs) != 2 or in_specs[0] is None or in_specs[1] is None:
+        return None                      # float operand or biased matmul
+    k = _inner_dim(g, node.inputs[1])
+    if k is None:
+        return None
+    return accumulator_spec(in_specs[0], in_specs[1], k)
+
+
+@datatype_rule("multithreshold", "mvau")
+def _rule_threshold(node, in_specs, g):
+    t_name = node.inputs[-1]
+    levels = _spec_for_levels(g, t_name)
+    if levels is None:
+        return None
+    return threshold_output_spec(
+        levels, node.attrs.get("out_base", 0),
+        node.attrs.get("out_scale", 1.0), node.attrs.get("out_bias", 0.0))
+
+
+@datatype_rule("mvau_int")
+def _rule_mvau_int(node, in_specs, g):
+    bits = node.attrs.get("out_bits")
+    if bits is None:
+        return None
+    return FixedPointSpec(bits, node.attrs["out_frac_bits"],
+                          node.attrs.get("out_signed", False))
+
+
+@datatype_rule("global_acc_pool")
+def _rule_gap(node, in_specs, g):
+    spec = in_specs[0]
+    if spec is None:
+        return None
+    spatial = node.attrs.get("spatial_size")
+    if spatial is None and node.inputs[0] in g.shapes:
+        shape = g.shapes[node.inputs[0]]
+        spatial = int(np.prod([shape[a] for a in node.attrs["axes"]]))
+    if spatial is None:
+        return None
+    growth = max(int(math.ceil(math.log2(max(spatial, 1)))), 0)
+    return FixedPointSpec(spec.total_bits + growth, spec.frac_bits,
+                          spec.signed)
+
+
+@datatype_rule("add")
+def _rule_add(node, in_specs, g):
+    if len(node.inputs) != 2:
+        return None                      # scalar-attr add: stays float
+    a, b = in_specs
+    if a is None or b is None or a.frac_bits != b.frac_bits:
+        return None                      # mismatched grids: not code-exact
+    return FixedPointSpec(max(a.total_bits, b.total_bits) + 1, a.frac_bits,
+                          a.signed or b.signed)
+
+
+@datatype_rule("mul")
+def _rule_mul(node, in_specs, g):
+    if len(node.inputs) != 1 or in_specs[0] is None:
+        return None
+    c = float(node.attrs.get("value", float("nan")))
+    if not (c > 0.0) or not math.isfinite(c):
+        return None
+    mantissa, exp = math.frexp(c)        # c = mantissa * 2**exp
+    if mantissa != 0.5:
+        return None                      # not a power of two: off-grid
+    shift = exp - 1
+    spec = in_specs[0]
+    return FixedPointSpec(spec.total_bits, spec.frac_bits - shift, spec.signed)
+
+
+@datatype_rule("quantize")
+def _rule_quantize(node, in_specs, g):
+    return FixedPointSpec(node.attrs["bits"], node.attrs["frac_bits"],
+                          node.attrs.get("signed", True))
+
+
+@datatype_rule("dequantize", "reduce_mean")
+def _rule_float(node, in_specs, g):
+    return None
+
+
+# ---------------------------------------------------------------------------
+# InferDataTypes — the annotation pass
+# ---------------------------------------------------------------------------
+def InferDataTypes(g: Graph) -> Graph:
+    """Propagate per-tensor FixedPointSpec annotations through the graph.
+
+    Seeds come from ``g.dtypes`` (exporters annotate graph inputs and weight
+    initializers); every node-output tensor gets an entry — a spec when the
+    op's rule can derive one, None (float) otherwise.  Pure annotation: the
+    executed function is untouched, so this pass is trivially golden-IO
+    clean.
+    """
+    g = g.copy()
+    g.toposort()
+    dt: Dict[str, Optional[FixedPointSpec]] = dict(g.dtypes)
+    for node in g.nodes:
+        rule = DATATYPE_RULES.get(node.op)
+        in_specs = [dt.get(t) for t in node.inputs]
+        spec = rule(node, in_specs, g) if rule is not None else None
+        for out in node.outputs:
+            dt[out] = spec
+    g.dtypes = dt
+    return g
+
+
+# ---------------------------------------------------------------------------
+# LowerToIntegerDatapath — the int rewrite
+# ---------------------------------------------------------------------------
+_INT_EXACT_PASSTHROUGH = {"im2col", "maxpool", "transpose", "flatten"}
+
+
+def _storage_array(codes: np.ndarray, spec: FixedPointSpec):
+    """Integer codes → narrowest dense storage (packed int8 for <=4 bits).
+
+    Returns ``(array, packed)``.
+    """
+    if spec.total_bits <= 4 and codes.shape[-1] % 2 == 0:
+        return np.asarray(quant.pack_int4(codes)), True
+    return codes.astype(np.dtype(quant.storage_dtype(spec))), False
+
+
+def _fits_int8(spec: FixedPointSpec) -> bool:
+    return spec.qmin >= -128 and spec.qmax <= 127
+
+
+def LowerToIntegerDatapath(g: Graph) -> Graph:
+    """Rewrite the float-emulated HW graph to the integer datapath.
+
+    * graph inputs with a spec annotation gain a ``quantize`` node (the
+      deployed artifact keeps the same on-grid float input contract);
+    * every ``mvau`` whose activation operand is integer-domain becomes
+      ``mvau_int``: the weight initializer is replaced by integer codes at
+      the narrowest storage dtype (packed int4 below 5 bits), and the float
+      threshold table is lowered to integer accumulator-domain thresholds
+      ``ceil(T / (s_x * s_w))`` clamped to the annotated accumulator range —
+      exact because an integer accumulator satisfies ``a >= t`` iff
+      ``a >= ceil(t)``;
+    * code-exact ops (im2col / maxpool / transpose / flatten / add on a
+      common grid / GlobalAccPool) stay in the integer domain;
+    * at the first op that is not code-exact (e.g. the GAP 1/(H·W) scalar
+      Mul) and at graph outputs, a ``dequantize`` node restores the float
+      value, so the lowered graph is bit-for-bit equal to its input graph.
+    """
+    g = g.copy()
+    g.toposort()
+    if not any(s is not None for s in g.dtypes.values()):
+        raise GraphBuildError(
+            f"graph '{g.name}' has no datatype annotations to lower from; "
+            "seed g.dtypes (exporters do) and run 'infer_datatypes' first")
+
+    int_dom: Dict[str, FixedPointSpec] = {}
+
+    # 1. quantize annotated graph inputs
+    for inp in g.inputs:
+        spec = g.dtypes.get(inp)
+        if spec is None:
+            continue
+        codes = g.fresh_name(inp + "_codes")
+        for c in list(g.consumers(inp)):
+            for pos, t in enumerate(c.inputs):
+                if t == inp:
+                    g.set_input(c, pos, codes)
+        g.insert_node(0, Node("quantize", [inp], [codes],
+                              {"bits": spec.total_bits,
+                               "frac_bits": spec.frac_bits,
+                               "signed": spec.signed}))
+        g.dtypes[codes] = spec
+        int_dom[codes] = spec
+    g.toposort()
+
+    deq_alias: Dict[str, str] = {}
+
+    def dequantized(tensor: str, before: Node) -> str:
+        """Get-or-create the float view of an int-domain tensor."""
+        if tensor in deq_alias:
+            return deq_alias[tensor]
+        spec = int_dom[tensor]
+        name = g.fresh_name(tensor + "_deq")
+        g.insert_node(g.nodes.index(before),
+                      Node("dequantize", [tensor], [name],
+                           {"scale": spec.scale}))
+        g.dtypes[name] = None
+        deq_alias[tensor] = name
+        return name
+
+    # 2. walk in topological order, extending the integer domain
+    for node in list(g.nodes):
+        if node.op == "quantize":
+            continue
+        if node.op == "mvau":
+            x_name, w_name, t_name = node.inputs
+            xspec = int_dom.get(x_name)
+            wspec = g.dtypes.get(w_name)
+            out_scale = float(node.attrs.get("out_scale", 1.0))
+            out_base = int(node.attrs.get("out_base", 0))
+            levels = _spec_for_levels(g, t_name)
+            out_spec = threshold_output_spec(
+                levels or 0, out_base, out_scale,
+                float(node.attrs.get("out_bias", 0.0)))
+            if xspec is None or wspec is None or w_name not in g.initializers \
+                    or t_name not in g.initializers or out_spec is None:
+                raise GraphBuildError(
+                    f"cannot lower mvau '{node.outputs[0]}' in graph "
+                    f"'{g.name}' to the integer datapath: needs an integer-"
+                    "domain activation, an annotated weight initializer and "
+                    "a power-of-two out_scale")
+            w = np.asarray(g.initializers[w_name])
+            k = w.shape[0]
+            acc = accumulator_spec(xspec, wspec, k)
+            w_codes = np.asarray(quant.quantize(w, wspec))
+            stored, packed = _storage_array(w_codes, wspec)
+            # Exact reachable accumulator range from the REAL weight codes
+            # (FINN's accumulator minimization): every partial sum is a
+            # subset sum of per-term extremes, so [lo, hi] bounds all
+            # intermediate states too.  The runtime datapath accumulates in
+            # int32 — a graph whose true range exceeds that must fail here,
+            # not wrap silently.
+            w64 = w_codes.astype(np.int64)
+            pos = np.clip(w64, 0, None).sum(axis=0)
+            neg = np.clip(w64, None, 0).sum(axis=0)
+            acc_hi = int((pos * xspec.qmax + neg * xspec.qmin).max())
+            acc_lo = int((pos * xspec.qmin + neg * xspec.qmax).min())
+            # >= so that the never-fires sentinel acc_hi + 1 stays int32 too
+            if acc_lo < -(2**31) or acc_hi >= 2**31 - 1:
+                raise GraphBuildError(
+                    f"mvau '{node.outputs[0]}' in graph '{g.name}': reachable "
+                    f"accumulator range [{acc_lo}, {acc_hi}] exceeds the "
+                    "int32 datapath — narrow the weight/activation grid "
+                    f"(annotated accumulator: {acc.describe()})")
+            t = np.asarray(g.initializers[t_name], np.float64)
+            t_int = np.ceil(t / (float(xspec.scale) * float(wspec.scale)))
+            # clamp to the accumulator's representable range (+1: a threshold
+            # above every reachable sum must never fire) — this is where a
+            # wrong accumulator-width rule becomes a semantic error that
+            # golden-IO verification catches
+            t_int = np.clip(t_int, float(acc.qmin), float(acc.qmax) + 1.0)
+            t_int = np.clip(t_int, float(acc_lo), float(acc_hi) + 1.0)
+            t_int = t_int.astype(np.int32)
+            g.initializers[w_name] = stored
+            g.initializers[t_name] = t_int
+            g.dtypes[w_name] = wspec
+            g.dtypes[t_name] = acc
+            node.op = "mvau_int"
+            node.attrs = {
+                "out_base": out_base,
+                "w_packed": packed,
+                "w_bits": wspec.total_bits,
+                "int8_ok": _fits_int8(xspec) and _fits_int8(wspec),
+                "out_bits": out_spec.total_bits,
+                "out_frac_bits": out_spec.frac_bits,
+                "out_signed": out_spec.signed,
+            }
+            int_dom[node.outputs[0]] = out_spec
+            g.dtypes[node.outputs[0]] = out_spec
+            continue
+        in_int = [t for t in node.inputs if t in int_dom]
+        lowerable = False
+        out_spec = None
+        if in_int and len(in_int) == len(
+                [t for t in node.inputs if t not in g.initializers]):
+            if node.op in _INT_EXACT_PASSTHROUGH:
+                lowerable, out_spec = True, int_dom[node.inputs[0]]
+            elif node.op == "add" and len(node.inputs) == 2:
+                a, b = (int_dom.get(t) for t in node.inputs)
+                if a is not None and b is not None \
+                        and a.frac_bits == b.frac_bits:
+                    lowerable = True
+                    out_spec = _rule_add(node, [a, b], g)
+            elif node.op == "global_acc_pool":
+                lowerable = True
+                out_spec = _rule_gap(node, [int_dom[node.inputs[0]]], g) \
+                    or int_dom[node.inputs[0]]
+        if lowerable:
+            for out in node.outputs:
+                int_dom[out] = out_spec
+                g.dtypes[out] = out_spec
+            continue
+        # frontier: this node stays float — feed it dequantized views
+        for t in in_int:
+            alias = dequantized(t, node)
+            for pos, name in enumerate(node.inputs):
+                if name == t:
+                    g.set_input(node, pos, alias)
+
+    # 3. graph outputs that ended up integer-domain get dequantized in place
+    for out in list(g.outputs):
+        if out not in int_dom:
+            continue
+        spec = int_dom[out]
+        prod = g.producer(out)
+        raw = g.fresh_name(out + "_int")
+        g.set_output(prod, prod.outputs.index(out), raw)
+        # anything else reading the codes keeps reading them under the new
+        # name; only the graph-output view is dequantized
+        for c in list(g.consumers(out)):
+            for pos, name in enumerate(c.inputs):
+                if name == out:
+                    g.set_input(c, pos, raw)
+        g.insert_after(prod, Node("dequantize", [raw], [out],
+                                  {"scale": spec.scale}))
+        int_dom[raw] = spec
+        g.dtypes[raw] = spec
+        g.dtypes[out] = None
+    g.toposort()
+    return g

@@ -24,10 +24,12 @@ build report.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Callable, Dict, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import recipes as R
 from repro.core.graph import _EXECUTORS, Graph, GraphBuildError
@@ -85,6 +87,7 @@ class DeployedModel:
     apply: Callable
     input_names: Tuple[str, ...]
     output_names: Tuple[str, ...]
+    datapath: str = "f32"
     _jitted: Optional[Callable] = None
 
     def __post_init__(self):
@@ -110,14 +113,42 @@ class DeployedModel:
 
         return op_histogram(self.graph)
 
-    def report(self) -> str:
+    def weight_bytes(self) -> int:
+        """Measured storage bytes across all baked-in constants (weight
+        codes, threshold tables) — the HBM/BRAM footprint the paper's
+        bit-width lever shrinks.  Packed int4 counts at packed density
+        because the packed array IS what is stored."""
+        return int(sum(np.asarray(v).nbytes
+                       for v in self.graph.initializers.values()))
+
+    def throughput(self, *inputs, iters: int = 20) -> Dict[str, float]:
+        """Measured wall-clock of the jitted program on ``inputs``:
+        ``{"ms_per_call", "calls_per_s"}`` (median-free simple mean after a
+        warm-up call, like benchmarks/compile_bench.py)."""
+        jax.block_until_ready(self._jitted(*inputs))     # warm-up / compile
+        t0 = time.perf_counter()
+        for _ in range(max(iters, 1)):
+            out = self._jitted(*inputs)
+        jax.block_until_ready(out)
+        dt = (time.perf_counter() - t0) / max(iters, 1)
+        return {"ms_per_call": dt * 1e3, "calls_per_s": 1.0 / dt}
+
+    def report(self, sample_input=None, iters: int = 20) -> str:
         ops = ", ".join(f"{k}×{v}" for k, v in sorted(self.op_counts().items()))
-        return (f"DeployedModel('{self.graph.name}', recipe='{self.recipe_name}', "
-                f"{len(self.graph.nodes)} nodes: {ops})\n" + self.trace.report())
+        head = (f"DeployedModel('{self.graph.name}', recipe='{self.recipe_name}', "
+                f"datapath='{self.datapath}', {len(self.graph.nodes)} nodes: "
+                f"{ops})\n  weight storage: {self.weight_bytes()} bytes")
+        if sample_input is not None:
+            t = self.throughput(sample_input, iters=iters)
+            head += (f"\n  measured: {t['ms_per_call']:.2f} ms/call "
+                     f"({t['calls_per_s']:.1f} calls/s) on "
+                     f"{jax.default_backend()}")
+        return head + "\n" + self.trace.report()
 
 
 def compile(graph_or_model: Any, qcfg: Any = None, *,
             recipe: Union[str, R.BuildRecipe],
+            datapath: str = "f32",
             sample_input: Optional[jax.Array] = None,
             verify_feeds: Optional[Dict[str, Any]] = None,
             interpret: Optional[bool] = None,
@@ -133,8 +164,16 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
       recipe: registered recipe name or a :class:`BuildRecipe` — required,
         because the pass list is architecture-dependent (the paper's core
         point): silently defaulting would mis-build foreign graphs.
+      datapath: ``"f32"`` executes the HW graph in float emulation of the
+        fixed-point grid (the QAT view); ``"int"`` appends the
+        ``infer_datatypes`` + ``lower_to_integer_datapath`` passes
+        (core/datatypes.py) so weights ship as integer codes at their
+        narrowest storage dtype and MVAUs run the integer compare-count
+        datapath — bit-for-bit equal to ``"f32"`` on the grid, with the
+        storage/bandwidth footprint of the paper's hardware.
       sample_input: optional golden input for FINN-style per-pass IO
-        verification (single-input graphs; use ``verify_feeds`` otherwise).
+        verification (single-input graphs; use ``verify_feeds`` otherwise) —
+        covers the integer lowering stage too.
       interpret: force Pallas interpret mode (default: auto — interpreted
         off-TPU, compiled on TPU).
 
@@ -144,6 +183,8 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
     :class:`~repro.core.graph.GraphBuildError` if the streamlined graph is
     not HW-mappable.
     """
+    if datapath not in ("f32", "int"):
+        raise ValueError(f"datapath must be 'f32' or 'int', got {datapath!r}")
     rec = R.recipe(recipe) if isinstance(recipe, str) else recipe
     if isinstance(graph_or_model, Graph):
         graph = graph_or_model
@@ -159,10 +200,14 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
                              "verify_feeds for multi-input graphs")
         verify_feeds = {graph.inputs[0]: sample_input}
 
+    passes = list(rec.passes)
+    if datapath == "int":
+        passes += ["infer_datatypes", "lower_to_integer_datapath"]
     result = PassManager(rtol=rtol, atol=atol).run(
-        graph, rec.passes, verify_feeds=verify_feeds)
+        graph, passes, verify_feeds=verify_feeds)
     hw = result.graph
     return DeployedModel(
         graph=hw, recipe_name=rec.name, trace=result.trace,
         apply=lower_graph(hw, interpret),
-        input_names=tuple(hw.inputs), output_names=tuple(hw.outputs))
+        input_names=tuple(hw.inputs), output_names=tuple(hw.outputs),
+        datapath=datapath)

@@ -83,13 +83,20 @@ class Graph:
     properties: Set[str] = dataclasses.field(default_factory=set)
     # Optional tensor-shape annotations, filled by infer_shapes().
     shapes: Dict[str, Tuple[int, ...]] = dataclasses.field(default_factory=dict)
+    # Per-tensor fixed-point datatype annotations (FixedPointSpec or None for
+    # float tensors), keyed by tensor name.  Seeded by exporters (graph
+    # inputs / weight initializers), propagated to every tensor by the
+    # ``infer_datatypes`` pass (core/datatypes.py).  The structured mutators
+    # below keep the map coherent under rewiring; like ``shapes`` it is an
+    # annotation — passes that need it re-derive via infer_datatypes.
+    dtypes: Dict[str, Any] = dataclasses.field(default_factory=dict)
     _cache: Optional[Dict[str, Any]] = dataclasses.field(
         default=None, init=False, repr=False, compare=False)
 
     def copy(self) -> "Graph":
         g = Graph([n.copy() for n in self.nodes], list(self.inputs),
                   list(self.outputs), dict(self.initializers), self.name,
-                  set(self.properties), dict(self.shapes))
+                  set(self.properties), dict(self.shapes), dict(self.dtypes))
         return g
 
     # -- cached adjacency index --------------------------------------------
@@ -115,6 +122,11 @@ class Graph:
     def set_output(self, node: Node, pos: int, tensor: str) -> None:
         old = node.outputs[pos]
         node.outputs[pos] = tensor
+        if old != tensor and old in self.dtypes and tensor not in self.dtypes:
+            # the renamed tensor carries the same values — the annotation
+            # follows it (the old name usually gets re-produced by a
+            # value-preserving node the caller inserts next)
+            self.dtypes[tensor] = self.dtypes[old]
         c = self._cache
         if c is not None and old != tensor:
             if c["prod"].get(old) is node:
@@ -133,6 +145,10 @@ class Graph:
                 lst = c["cons"].get(t)
                 if lst and node in lst:
                     lst.remove(node)
+        for t in node.outputs:
+            if self.producer(t) is None and t not in self.initializers \
+                    and t not in self.inputs:
+                self.dtypes.pop(t, None)    # tensor ceased to exist
 
     def insert_node(self, pos: int, node: Node) -> None:
         self.nodes.insert(pos, node)
@@ -334,14 +350,49 @@ def _ex_mvau(node: Node, x: jax.Array, w: jax.Array, t: jax.Array) -> jax.Array:
     )
 
 
+# -- integer-datapath ops (emitted by core.datatypes.LowerToIntegerDatapath) --
+def _ex_quantize(node: Node, x: jax.Array) -> jax.Array:
+    """Real → integer codes at the node's annotated spec (int32 codes —
+    narrow storage is an initializer concern; activations stay registers)."""
+    from repro.core import quant
+
+    spec = quant.FixedPointSpec(node.attrs["bits"], node.attrs["frac_bits"],
+                                node.attrs.get("signed", True))
+    return quant.quantize(x, spec)
+
+
+def _ex_dequantize(node: Node, q: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * jnp.float32(node.attrs["scale"])
+
+
+def _ex_mvau_int(node: Node, x: jax.Array, w: jax.Array,
+                 t: jax.Array) -> jax.Array:
+    """Integer MVAU: code × code matmul, int32 accumulate, int thresholds."""
+    from repro.core import quant
+    from repro.kernels import ref
+
+    if node.attrs.get("w_packed"):
+        w = quant.unpack_int4(w)
+    return ref.mvau_int(x, w, t, out_base=node.attrs.get("out_base", 0))
+
+
+def _ex_gap(node: Node, x: jax.Array) -> jax.Array:
+    if jnp.issubdtype(x.dtype, jnp.integer):
+        x = x.astype(jnp.int32)     # sub-int32 codes must not wrap in the sum
+    return jnp.sum(x, axis=tuple(node.attrs["axes"]))
+
+
 _EXECUTORS: Dict[str, Callable[..., jax.Array]] = {
     "im2col": _ex_im2col,
     "matmul": _ex_matmul,
     "multithreshold": _ex_multithreshold,
     "mvau": _ex_mvau,
+    "mvau_int": _ex_mvau_int,
+    "quantize": _ex_quantize,
+    "dequantize": _ex_dequantize,
     "transpose": lambda node, x: jnp.transpose(x, node.attrs["perm"]),
     "reduce_mean": lambda node, x: jnp.mean(x, axis=tuple(node.attrs["axes"])),
-    "global_acc_pool": lambda node, x: jnp.sum(x, axis=tuple(node.attrs["axes"])),
+    "global_acc_pool": _ex_gap,
     "mul": lambda node, x, c=None: x * (node.attrs["value"] if c is None else c),
     "add": lambda node, a, b=None: a + (node.attrs["value"] if b is None else b),
     "maxpool": lambda node, x: _maxpool(node, x),

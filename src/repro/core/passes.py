@@ -86,11 +86,27 @@ def _prop_hw_mappable(g: Graph) -> bool:
     return all(n.op in T._HW_OPS for n in g.nodes)
 
 
+def _prop_datatypes_annotated(g: Graph) -> bool:
+    """Every node-output tensor carries a datatype annotation (spec or an
+    explicit None-for-float) — exactly what InferDataTypes establishes.
+    Integer lowering without this would guess bit-widths from convention,
+    the config-level failure mode this layer exists to remove."""
+    return all(t in g.dtypes for n in g.nodes for t in n.outputs)
+
+
+def _prop_integer_datapath(g: Graph) -> bool:
+    """No float-emulated quantized compute remains (mvau/multithreshold all
+    lowered to their integer forms)."""
+    return not any(n.op in ("mvau", "multithreshold") for n in g.nodes)
+
+
 PROPERTY_CHECKS: Dict[str, Callable[[Graph], bool]] = {
     "shape_inference": _prop_shape_inference,
     "trailing_axis_thresholds": _prop_trailing_axis_thresholds,
     "no_reduce_mean": _prop_no_reduce_mean,
     "hw_mappable": _prop_hw_mappable,
+    "datatypes_annotated": _prop_datatypes_annotated,
+    "integer_datapath": _prop_integer_datapath,
 }
 
 
@@ -348,3 +364,20 @@ register_pass(
     "verify_hw_mappable", T.VerifyHWMappable,
     description="gate: every node must map to a HW layer",
     establishes=("hw_mappable",))
+
+# datatype backbone (core/datatypes.py): annotation then integer lowering.
+# Imported here (not at module top) to keep the pass/property tables free of
+# a circular import — datatypes.py only depends on graph + quant.
+from repro.core import datatypes as DT  # noqa: E402
+
+register_pass(
+    "infer_datatypes", DT.InferDataTypes,
+    description="propagate per-tensor FixedPointSpec annotations (FINN "
+                "InferDataTypes): accumulator/threshold/GAP width rules",
+    establishes=("datatypes_annotated",))
+register_pass(
+    "lower_to_integer_datapath", DT.LowerToIntegerDatapath,
+    description="float-emulated HW graph -> integer datapath (quantized "
+                "inputs, integer weight codes + thresholds, mvau_int)",
+    requires=("datatypes_annotated",),
+    establishes=("integer_datapath",))

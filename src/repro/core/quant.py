@@ -37,6 +37,7 @@ __all__ = [
     "fake_quant",
     "thresholds_for",
     "multithreshold",
+    "threshold_counts",
     "pack_int4",
     "unpack_int4",
     "storage_dtype",
@@ -57,8 +58,12 @@ class FixedPointSpec:
     signed: bool = True
 
     def __post_init__(self):
-        if not (1 <= self.total_bits <= 32):
-            raise ValueError(f"total_bits must be in [1,32], got {self.total_bits}")
+        # 64-bit headroom: storage formats stop at 32 bits (storage_dtype
+        # raises above that), but *accumulator* specs derived by datatype
+        # inference (w_bits + a_bits + ceil(log2 K), core/datatypes.py) can
+        # legitimately exceed 32 and still need a representable annotation.
+        if not (1 <= self.total_bits <= 64):
+            raise ValueError(f"total_bits must be in [1,64], got {self.total_bits}")
         if self.frac_bits < -32 or self.frac_bits > 32:
             raise ValueError(f"unreasonable frac_bits {self.frac_bits}")
         if self.signed and self.total_bits < 2:
@@ -207,18 +212,44 @@ def multithreshold(x: jax.Array, thresholds: jax.Array,
     transforms.AbsorbTransposeIntoMultiThreshold for why the trailing-dim
     convention matters).
     """
-    if thresholds.ndim == 1:
-        cmp = x[..., None] >= thresholds
-    elif thresholds.ndim == 2:
-        if x.shape[-1] != thresholds.shape[0]:
-            raise ValueError(
-                f"per-channel thresholds {thresholds.shape} vs x {x.shape}: "
-                "channel dim must be trailing (NHWC canonical form)")
-        cmp = x[..., None] >= thresholds
-    else:
-        raise ValueError("thresholds must be rank 1 or 2")
-    counts = jnp.sum(cmp, axis=-1).astype(jnp.float32)
+    if thresholds.ndim == 2 and x.shape[-1] != thresholds.shape[0]:
+        raise ValueError(
+            f"per-channel thresholds {thresholds.shape} vs x {x.shape}: "
+            "channel dim must be trailing (NHWC canonical form)")
+    counts = threshold_counts(x, thresholds).astype(jnp.float32)
     return (out_scale * (out_base + counts) + out_bias).astype(x.dtype)
+
+
+def threshold_counts(x: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """``Σᵢ 1[x ≥ Tᵢ]`` over the threshold axis — int32 counts.
+
+    ``thresholds`` is ``(L,)`` (per-tensor) or ``(C, L)`` (per-channel, C =
+    x's trailing dim).  When the threshold table is a *compile-time constant*
+    (always true for graph initializers) and sorted ascending (always true
+    for tables from :func:`thresholds_for`, which monotone rewrites like
+    BN-folding and scale-folding preserve), the count is computed as a
+    binary search: ``searchsorted(T, x, side='right')`` counts exactly the
+    ``Tᵢ ≤ x`` — O(log L) per element instead of the O(L) compare-count
+    that makes 16-bit activations (L = 65535) intractable.  Unsorted or
+    traced tables fall back to the dense compare, so semantics never depend
+    on the sortedness assumption.
+    """
+    if thresholds.ndim not in (1, 2):
+        raise ValueError("thresholds must be rank 1 or 2")
+    n_levels = thresholds.shape[-1]
+    concrete = not isinstance(thresholds, jax.core.Tracer)
+    if concrete and n_levels >= 64:
+        t = np.asarray(thresholds)
+        if bool(np.all(np.diff(t, axis=-1) >= 0)):
+            tj = jnp.asarray(t)
+            if thresholds.ndim == 1:
+                return jnp.searchsorted(tj, x, side="right").astype(jnp.int32)
+            per_channel = jax.vmap(
+                lambda tc, xc: jnp.searchsorted(tc, xc, side="right"),
+                in_axes=(0, -1), out_axes=-1)
+            return per_channel(tj, x).astype(jnp.int32)
+    cmp = x[..., None] >= thresholds
+    return jnp.sum(cmp, axis=-1).astype(jnp.int32)
 
 
 # --------------------------------------------------------------------------
@@ -255,7 +286,11 @@ def storage_dtype(spec: FixedPointSpec) -> jnp.dtype:
         return jnp.int8
     if spec.total_bits <= 16:
         return jnp.int16
-    return jnp.int32
+    if spec.total_bits <= 32:
+        return jnp.int32
+    raise ValueError(
+        f"no dense storage dtype for {spec.total_bits}-bit codes; specs "
+        "wider than 32 bits are accumulator annotations, not storage formats")
 
 
 def storage_bytes_per_element(spec: Optional[FixedPointSpec],

@@ -110,7 +110,11 @@ def ConvertReduceMeanToGAP(g: Graph) -> Graph:
                 "reduce_mean lacks spatial_size attr; shape inference must "
                 "run before ConvertReduceMeanToGAP")
         acc_out = g.fresh_name(node.outputs[0] + "_accsum")
-        gap = Node("global_acc_pool", [node.inputs[0]], [acc_out], {"axes": list(axes)})
+        # carry the spatial size onto the GAP node: the datatype-inference
+        # GAP rule (sum width = in_bits + ceil(log2 H*W)) needs it, and
+        # re-deriving would require shapes the streamlined graph may lack
+        gap = Node("global_acc_pool", [node.inputs[0]], [acc_out],
+                   {"axes": list(axes), "spatial_size": int(hw)})
         mul = Node("mul", [acc_out], [node.outputs[0]], {"value": 1.0 / float(hw)})
         i = g.nodes.index(node)
         g.remove_node(node)
@@ -284,7 +288,8 @@ def FuseMatMulThresholdToMVAU(g: Graph) -> Graph:
     return g
 
 
-_HW_OPS = {"im2col", "mvau", "transpose", "maxpool", "global_acc_pool",
+_HW_OPS = {"im2col", "mvau", "mvau_int", "quantize", "dequantize",
+           "transpose", "maxpool", "global_acc_pool",
            "mul", "add", "flatten", "matmul"}
 
 

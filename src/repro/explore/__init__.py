@@ -1,0 +1,12 @@
+"""Design-space exploration over bit-width configurations (paper Tables
+II/III): compile a grid of (W, A) points through both datapaths, measure
+episode accuracy / storage bytes / throughput, and emit the frontier."""
+
+from repro.explore.sweep import (  # noqa: F401
+    DEFAULT_GRID,
+    config_for,
+    pareto_frontier,
+    sweep,
+)
+
+__all__ = ["sweep", "config_for", "pareto_frontier", "DEFAULT_GRID"]

@@ -1,0 +1,152 @@
+"""Bit-width design-space exploration — the paper's Tables II/III as a
+program.
+
+The paper's contribution is an *environment*: pick a (W, A) fixed-point
+grid, QAT-train the few-shot backbone on it, build the HW graph at the same
+grid, and read off the accuracy/footprint/throughput trade — then repeat
+over the grid to find the knee (their chosen point: w6a4).  :func:`sweep`
+automates exactly that loop over the compiler in this repo:
+
+for each (W, A) point:
+  1. QAT-pretrain the ResNet-9 backbone at that grid (``fsl.pipeline``);
+  2. compile BOTH deployment artifacts — ``datapath="f32"`` (grid-emulated)
+     and ``datapath="int"`` (integer codes + ``mvau_int``) — and assert
+     they agree bit-for-bit on a probe batch;
+  3. score novel-class episode accuracy through the deployed int artifact
+     (the deployed-accuracy contract);
+  4. measure weight storage bytes (f32 vs int) and per-batch latency.
+
+The result is a JSON-serializable dict with one record per point and the
+accuracy-vs-bytes Pareto frontier marked — the machine-readable form of the
+paper's Table II (accuracy per bit-width) and Table III (throughput).
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.core.quant import FixedPointSpec, QuantConfig, fake_quant
+from repro.data.synthetic import SyntheticImages
+from repro.fsl.pipeline import FSLPipeline, evaluate_episodes, pretrain_backbone
+
+__all__ = ["DEFAULT_GRID", "config_for", "pareto_frontier", "sweep"]
+
+# (weight_bits, act_bits) grid — paper Table II's sweep axis, bracketing the
+# chosen w6a4 point from "collapses" (tiny) to "conventional" (wide).
+DEFAULT_GRID: Tuple[Tuple[int, int], ...] = ((3, 2), (4, 4), (6, 4), (8, 8))
+
+
+def config_for(w_bits: int, a_bits: int) -> QuantConfig:
+    """The paper's frac-split convention for a (W, A) point: signed weights
+    keep one integer bit (sign), unsigned activations keep two magnitude
+    bits — w6a4 maps to exactly the paper's 6(1.5)/4(2.2) deployment point.
+    """
+    return QuantConfig(
+        weight=FixedPointSpec(w_bits, max(w_bits - 1, 0), signed=True),
+        act=FixedPointSpec(a_bits, max(a_bits - 2, 0), signed=False))
+
+
+def pareto_frontier(points: Sequence[Dict]) -> List[int]:
+    """Indices of points not dominated on (maximize accuracy, minimize int
+    weight bytes)."""
+    frontier = []
+    for i, p in enumerate(points):
+        dominated = any(
+            q["acc_mean"] >= p["acc_mean"]
+            and q["weight_bytes_int"] <= p["weight_bytes_int"]
+            and (q["acc_mean"] > p["acc_mean"]
+                 or q["weight_bytes_int"] < p["weight_bytes_int"])
+            for j, q in enumerate(points) if j != i)
+        if not dominated:
+            frontier.append(i)
+    return frontier
+
+
+def sweep(grid: Sequence[Tuple[int, int]] = DEFAULT_GRID, *,
+          width: int = 8, steps: int = 120, episodes: int = 10,
+          n_base: int = 12, n_novel: int = 6, batch: int = 32,
+          bench_batch: int = 8, bench_iters: int = 10, seed: int = 0,
+          data: Optional[SyntheticImages] = None,
+          out_path: Optional[str] = None, verbose: bool = True) -> Dict:
+    """Run the bit-width DSE loop; returns (and optionally writes) the
+    frontier dict.  See the module docstring for what each point measures.
+    """
+    if data is None:
+        data = SyntheticImages(n_base=n_base, n_novel=n_novel, seed=seed)
+    points: List[Dict] = []
+    for w_bits, a_bits in grid:
+        qcfg = config_for(w_bits, a_bits)
+        pipe = FSLPipeline(width=width, qcfg=qcfg)
+        out = pretrain_backbone(data, pipe, steps=steps, batch=batch,
+                                seed=seed)
+        params = out["params"]
+
+        feats_int = pipe.deploy(params, datapath="int")
+        dm_int = feats_int.deployed_model
+        dm_f32 = pipe.deploy(params, datapath="f32").deployed_model
+
+        probe = jax.random.uniform(jax.random.PRNGKey(seed + 1),
+                                   (bench_batch, data.img, data.img, 3))
+        probe_q = fake_quant(probe, qcfg.act)
+        bitexact = bool(np.array_equal(np.asarray(dm_f32(probe_q)),
+                                       np.asarray(dm_int(probe_q))))
+
+        acc, ci = evaluate_episodes(params, data, pipe, n_episodes=episodes,
+                                    seed=seed + 100, feats_fn=feats_int)
+        t_f32 = dm_f32.throughput(probe_q, iters=bench_iters)
+        t_int = dm_int.throughput(probe_q, iters=bench_iters)
+        point = {
+            "w_bits": w_bits, "a_bits": a_bits,
+            "weight_spec": qcfg.weight.describe(),
+            "act_spec": qcfg.act.describe(),
+            "acc_mean": acc, "acc_ci95": ci,
+            "weight_bytes_f32": dm_f32.weight_bytes(),
+            "weight_bytes_int": dm_int.weight_bytes(),
+            "f32_ms_per_batch": t_f32["ms_per_call"],
+            "int_ms_per_batch": t_int["ms_per_call"],
+            "int_batches_per_s": t_int["calls_per_s"],
+            "bitexact_int_vs_f32": bitexact,
+            "final_pretrain_loss": float(out["losses"][-1]),
+        }
+        points.append(point)
+        if verbose:
+            print(f"sweep,w{w_bits}a{a_bits},acc={acc:.3f}±{ci:.3f},"
+                  f"bytes={point['weight_bytes_int']},"
+                  f"ms={point['int_ms_per_batch']:.2f},"
+                  f"bitexact={int(bitexact)}")
+
+    result = {
+        "model": "resnet9", "width": width, "backend": jax.default_backend(),
+        "pretrain_steps": steps, "episodes": episodes,
+        "points": points, "frontier": pareto_frontier(points),
+    }
+    if out_path:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=2, sort_keys=True)
+        if verbose:
+            print(f"sweep,written,{out_path}")
+    return result
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny budget: fewer steps/episodes (CI smoke)")
+    ap.add_argument("--out", default="SWEEP_frontier.json")
+    ap.add_argument("--width", type=int, default=8)
+    args = ap.parse_args(argv)
+    if args.quick:
+        sweep(width=min(args.width, 8), steps=20, episodes=3, bench_iters=3,
+              out_path=args.out)
+    else:
+        sweep(width=args.width, steps=240, episodes=20, out_path=args.out)
+
+
+if __name__ == "__main__":
+    main()

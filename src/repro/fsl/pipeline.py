@@ -38,12 +38,19 @@ class FSLPipeline:
             f = f + resnet9.forward(params, x[:, :, ::-1], self.qcfg, self.width)
         return f
 
-    def deploy(self, params):
+    def deploy(self, params, datapath: str = "f32"):
         """Compile the backbone into a :class:`repro.DeployedModel` and
         return a feature function numerically identical to :meth:`features`
         — the deployed-accuracy contract: the SAME bit-width grid drives QAT
         and the compiled HW graph, so episode accuracy measured through this
         path IS the deployed accuracy.
+
+        ``datapath="int"`` deploys the integer datapath (integer weight
+        codes + ``mvau_int``) — bit-for-bit the same features, hardware
+        storage footprint.  The whole flip ensemble (on-grid input quant,
+        both orientations, the sum) traces into ONE jitted program, so per
+        episode batch there is a single dispatch instead of two jitted
+        calls plus eager ``fake_quant`` glue.
         """
         from repro.core.deploy import compile as compile_graph
         from repro.core.quant import fake_quant
@@ -51,14 +58,21 @@ class FSLPipeline:
         if self.qcfg is None:
             raise ValueError("deploy() needs a QuantConfig: the compiled "
                              "graph bakes thresholds for a specific grid")
-        dm = compile_graph(params, self.qcfg, recipe="resnet9")
+        dm = compile_graph(params, self.qcfg, recipe="resnet9",
+                           datapath=datapath)
+        act = self.qcfg.act
+        flip = self.easy_augment
+
+        def _features(x: jax.Array) -> jax.Array:
+            f = dm.apply(fake_quant(x, act))[0]
+            if flip:
+                f = f + dm.apply(fake_quant(x[:, :, ::-1], act))[0]
+            return f
+
+        fused = jax.jit(_features)
 
         def feats(x: jax.Array) -> jax.Array:
-            xq = fake_quant(x, self.qcfg.act)   # graph input contract: on-grid
-            f = dm(xq)
-            if self.easy_augment:
-                f = f + dm(fake_quant(x[:, :, ::-1], self.qcfg.act))
-            return f
+            return fused(x)
 
         feats.deployed_model = dm
         return feats

@@ -108,10 +108,27 @@ def graph_op_impls(interpret: Optional[bool] = None):
             return ref.mvau(x.astype(jnp.float32), w, jnp.asarray(t), **kw)
         return mvau(x, w, t, interpret=False, **kw)
 
+    def _mvau_int_node(node, x, w, t):
+        from repro.core import quant as Q
+
+        if node.attrs.get("w_packed"):
+            w = Q.unpack_int4(w)
+        base = node.attrs.get("out_base", 0)
+        if not emulated and node.attrs.get("int8_ok"):
+            # both operands' codes fit int8: take the compiled Pallas int
+            # datapath (int8 MXU operands, int32 accumulate)
+            return mvau_int(x.astype(jnp.int8), w.astype(jnp.int8),
+                            t, out_base=base, interpret=False)
+        # wider codes (or CPU): XLA-native exact int32 oracle
+        return ref.mvau_int(x, w, t, out_base=base)
+
     def _gap_node(node, x):
         axes = tuple(node.attrs["axes"])
         if x.ndim == 4 and axes == (1, 2):
             return ref.gap(x) if emulated else gap(x, interpret=False)
+        if jnp.issubdtype(x.dtype, jnp.integer):
+            x = x.astype(jnp.int32)
         return jnp.sum(x, axis=axes)
 
-    return {"mvau": _mvau_node, "global_acc_pool": _gap_node}
+    return {"mvau": _mvau_node, "mvau_int": _mvau_int_node,
+            "global_acc_pool": _gap_node}

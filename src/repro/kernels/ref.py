@@ -30,17 +30,16 @@ def mvau(x: jax.Array, w: jax.Array, thresholds: jax.Array,
 
 def mvau_int(x_codes: jax.Array, w_codes: jax.Array, thresholds_int: jax.Array,
              out_base: int = 0) -> jax.Array:
-    """Integer-domain MVAU: int8 codes, int32 accumulate, int32 thresholds.
+    """Integer-domain MVAU: integer codes, int32 accumulate, int thresholds.
 
     This is the FINN datapath proper — scales have been folded into the
-    thresholds, so the arithmetic is exact integer compare-count.
+    thresholds, so the arithmetic is exact integer compare-count
+    (``threshold_counts`` binary-searches sorted constant tables, which
+    keeps 16-bit activation grids — 65535 levels — tractable).
     """
     acc = jnp.matmul(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32))
-    if thresholds_int.ndim == 1:
-        cmp = acc[..., None] >= thresholds_int
-    else:
-        cmp = acc[..., None] >= thresholds_int  # (..., N, L) vs (N, L)
-    return (out_base + jnp.sum(cmp, axis=-1)).astype(jnp.int32)
+    counts = quant.threshold_counts(acc, thresholds_int)
+    return (out_base + counts).astype(jnp.int32)
 
 
 def qmatmul(x: jax.Array, w_codes: jax.Array, scale: jax.Array,

@@ -194,7 +194,15 @@ def export_graph(params: Params, qcfg: QuantConfig, width: int = 64,
 
     nodes.append(Node("reduce_mean", [src], ["features"],
                       {"axes": [1, 2], "spatial_size": hw * hw}))
-    return Graph(nodes, ["x"], ["features"], inits, name="resnet9")
+    g = Graph(nodes, ["x"], ["features"], inits, name="resnet9")
+    # Datatype seeds for InferDataTypes (core/datatypes.py): the input rides
+    # the activation grid, weight initializers the weight grid; threshold
+    # tables are float compile-time constants until integer lowering.
+    g.dtypes["x"] = as_
+    for blk in plan(width):
+        g.dtypes[f"{blk['name']}_w"] = ws
+        g.dtypes[f"{blk['name']}_t"] = None
+    return g
 
 
 # ---------------------------------------------------------------------------

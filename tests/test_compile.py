@@ -104,6 +104,86 @@ def test_deployed_model_structure(setup):
 
 
 # ---------------------------------------------------------------------------
+# Integer datapath (ISSUE 2): datatype-annotated lowering to mvau_int
+# ---------------------------------------------------------------------------
+def test_int_datapath_bit_for_bit_w6a4(setup):
+    """datapath='int' == interpreter == f32 artifact, exactly, with >= 2x
+    smaller weight storage at the paper's deployment point."""
+    params, _, x_q = setup
+    g = resnet9.export_graph(params, QCFG, width=WIDTH)
+    dm_f32 = repro.compile(g, recipe="resnet9")
+    dm_int = repro.compile(g, recipe="resnet9", datapath="int")
+    hw = build_dataflow(g, RESNET9_BUILD_STEPS)
+    interp = np.asarray(execute(hw, {"x": x_q})[0])
+    np.testing.assert_array_equal(np.asarray(dm_int(x_q)), interp)
+    np.testing.assert_array_equal(np.asarray(dm_int(x_q)),
+                                  np.asarray(dm_f32(x_q)))
+    assert dm_int.weight_bytes() * 2 <= dm_f32.weight_bytes()
+    assert "datapath='int'" in dm_int.report()
+
+
+def test_int_datapath_bit_for_bit_w16a16():
+    """The conventional 16-bit grid (65535 threshold levels) lowers and
+    matches exactly too — the searchsorted threshold path at full width."""
+    qcfg = quant.QuantConfig.paper_w16a16()
+    params = resnet9.init_params(jax.random.PRNGKey(2), width=4)
+    g = resnet9.export_graph(params, qcfg, width=4, img=16)
+    x = jax.random.uniform(jax.random.PRNGKey(3), (2, 16, 16, 3))
+    x_q = quant.fake_quant(x, qcfg.act)
+    dm_f32 = repro.compile(g, recipe="resnet9")
+    dm_int = repro.compile(g, recipe="resnet9", datapath="int")
+    np.testing.assert_array_equal(np.asarray(dm_int(x_q)),
+                                  np.asarray(dm_f32(x_q)))
+
+
+def test_int_datapath_structure(setup):
+    params, _, _ = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9", datapath="int")
+    ops = dm.op_counts()
+    assert ops.get("mvau_int", 0) == 8 and "mvau" not in ops
+    assert ops.get("quantize") == 1 and ops.get("dequantize") == 1
+    # weights stored at their narrowest dense dtype (6-bit -> int8)
+    w = dm.graph.initializers["c0_w"]
+    assert np.asarray(w).dtype == np.int8
+    assert np.asarray(dm.graph.initializers["c0_t"]).dtype == np.int32
+
+
+def test_int_lowering_golden_io_verified(setup):
+    """FINN-style per-pass verification covers the integer lowering stage:
+    every pass, including lower_to_integer_datapath, is exactly IO-clean."""
+    params, _, x_q = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9", datapath="int",
+                       sample_input=np.asarray(x_q))
+    by_name = {r.name: r for r in dm.trace.records}
+    assert by_name["lower_to_integer_datapath"].verified
+    assert by_name["lower_to_integer_datapath"].max_abs_err == 0.0
+    assert all(r.verified for r in dm.trace.records)
+
+
+def test_int_lowering_wrong_width_rule_caught(setup, monkeypatch):
+    """An injected too-narrow accumulator rule clamps thresholds wrongly;
+    golden-IO verification turns that into PassVerificationError instead of
+    a silently mis-quantized artifact."""
+    from repro.core import datatypes as DT
+
+    params, _, x_q = setup
+
+    def narrow_accumulator(x_spec, w_spec, k):
+        return quant.FixedPointSpec(6, x_spec.frac_bits + w_spec.frac_bits)
+
+    monkeypatch.setattr(DT, "accumulator_spec", narrow_accumulator)
+    with pytest.raises(PassVerificationError, match="lower_to_integer"):
+        repro.compile(params, QCFG, recipe="resnet9", datapath="int",
+                      sample_input=np.asarray(x_q))
+
+
+def test_int_datapath_rejects_unknown_datapath(setup):
+    params, _, _ = setup
+    with pytest.raises(ValueError, match="datapath"):
+        repro.compile(params, QCFG, recipe="resnet9", datapath="int4")
+
+
+# ---------------------------------------------------------------------------
 # PassManager ordering checks (the paper's Fig. 4 bug, made a hard error)
 # ---------------------------------------------------------------------------
 def test_recipe_order_statically_rejected(setup):

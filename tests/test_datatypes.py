@@ -1,0 +1,267 @@
+"""Per-tensor datatype inference + integer lowering (ISSUE 2 tentpole):
+
+* width-propagation rules: MatMul accumulator ``w+a+ceil(log2 K)``, GAP
+  ``in+ceil(log2 HW)``, MultiThreshold ``ceil(log2(L+1))`` unsigned,
+  Add/Mul/Transpose;
+* ``infer_datatypes`` is a registered pass establishing
+  ``datatypes_annotated``; lowering REQUIRES it (PassOrderError otherwise);
+* the Graph ``dtypes`` annotation map survives copy() and the structured
+  mutators.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import datatypes as DT
+from repro.core import quant
+from repro.core.graph import Graph, Node
+from repro.core.passes import PASS_REGISTRY, PassManager, PassOrderError
+from repro.core.quant import FixedPointSpec, QuantConfig
+from repro.core.recipes import recipe
+from repro.models import resnet9
+
+W6 = FixedPointSpec(6, 5, signed=True)
+A4 = FixedPointSpec(4, 2, signed=False)
+
+
+def _single_node_graph(node, inits=None, in_dtypes=None,
+                       inputs=("x",), outputs=("y",)):
+    g = Graph([node], list(inputs), list(outputs), dict(inits or {}))
+    g.dtypes.update(in_dtypes or {})
+    return g
+
+
+# ---------------------------------------------------------------------------
+# Rules
+# ---------------------------------------------------------------------------
+def test_matmul_accumulator_rule():
+    w = np.zeros((64, 8), np.float32)
+    g = _single_node_graph(Node("matmul", ["x", "w"], ["y"]), {"w": w},
+                           {"x": A4, "w": W6})
+    g2 = DT.InferDataTypes(g)
+    acc = g2.dtypes["y"]
+    assert acc.total_bits == 4 + 6 + 6          # ceil(log2 64) = 6
+    assert acc.frac_bits == 2 + 5
+    assert acc.signed
+
+
+def test_accumulator_spec_formula():
+    acc = DT.accumulator_spec(A4, W6, 576)
+    assert acc.total_bits == 4 + 6 + 10         # ceil(log2 576) = 10
+    assert DT.accumulator_spec(A4, W6, 1).total_bits == 10
+
+
+def test_gap_sum_rule():
+    g = _single_node_graph(
+        Node("global_acc_pool", ["x"], ["y"],
+             {"axes": [1, 2], "spatial_size": 49}),
+        in_dtypes={"x": A4})
+    spec = DT.InferDataTypes(g).dtypes["y"]
+    assert spec.total_bits == 4 + 6             # ceil(log2 49) = 6
+    assert spec.frac_bits == A4.frac_bits and not spec.signed
+
+
+def test_multithreshold_output_rule():
+    t = np.sort(np.random.default_rng(0).normal(size=(8, 15)), axis=1)
+    g = _single_node_graph(
+        Node("multithreshold", ["x", "t"], ["y"],
+             {"out_base": 0, "out_scale": 0.25}),
+        {"t": t.astype(np.float32)}, {"x": None})
+    spec = DT.InferDataTypes(g).dtypes["y"]
+    assert spec.total_bits == 4                 # ceil(log2 16) over 15 levels
+    assert not spec.signed and spec.frac_bits == 2
+
+
+def test_threshold_output_spec_off_grid_scale_is_none():
+    assert DT.threshold_output_spec(15, 0, 0.3) is None
+    assert DT.threshold_output_spec(15, 0, 0.25, out_bias=1.0) is None
+    signed = DT.threshold_output_spec(15, out_base=-8, out_scale=1.0)
+    assert signed.signed and signed.qmin <= -8 and signed.qmax >= 7
+
+
+def test_add_mul_transpose_rules():
+    g = _single_node_graph(Node("add", ["a", "b"], ["y"]),
+                           in_dtypes={"a": A4, "b": A4},
+                           inputs=("a", "b"))
+    assert DT.InferDataTypes(g).dtypes["y"].total_bits == 5
+
+    g = _single_node_graph(Node("mul", ["x"], ["y"], {"value": 0.25}),
+                           in_dtypes={"x": A4})
+    spec = DT.InferDataTypes(g).dtypes["y"]
+    assert spec.total_bits == 4 and spec.frac_bits == A4.frac_bits + 2
+
+    g = _single_node_graph(Node("mul", ["x"], ["y"], {"value": 1.0 / 3}),
+                           in_dtypes={"x": A4})
+    assert DT.InferDataTypes(g).dtypes["y"] is None   # off-grid scale
+
+    g = _single_node_graph(Node("transpose", ["x"], ["y"],
+                                {"perm": [0, 2, 1]}),
+                           in_dtypes={"x": W6})
+    assert DT.InferDataTypes(g).dtypes["y"] == W6
+
+
+def test_every_tensor_annotated_on_resnet9():
+    params = resnet9.init_params(jax.random.PRNGKey(0), width=4)
+    g = resnet9.export_graph(params, QuantConfig.paper_w6a4(), width=4)
+    g2 = DT.InferDataTypes(g)
+    for n in g2.nodes:
+        for t in n.outputs:
+            assert t in g2.dtypes
+    # an MVAU-to-be MatMul accumulator is wider than both operands
+    mm_out = next(n.outputs[0] for n in g2.nodes if n.op == "matmul")
+    assert g2.dtypes[mm_out].total_bits > 6
+
+
+# ---------------------------------------------------------------------------
+# Pass registration + ordering contract
+# ---------------------------------------------------------------------------
+def test_passes_registered_with_metadata():
+    infer = PASS_REGISTRY["infer_datatypes"]
+    lower = PASS_REGISTRY["lower_to_integer_datapath"]
+    assert "datatypes_annotated" in infer.establishes
+    assert "datatypes_annotated" in lower.requires
+    assert "integer_datapath" in lower.establishes
+
+
+def test_lowering_without_inference_is_pass_order_error():
+    """A recipe omitting infer_datatypes before integer lowering fails
+    loudly instead of guessing widths (ISSUE 2 acceptance)."""
+    params = resnet9.init_params(jax.random.PRNGKey(0), width=4)
+    g = resnet9.export_graph(params, QuantConfig.paper_w6a4(), width=4)
+    hw = PassManager().run(g, list(recipe("resnet9").passes)).graph
+    with pytest.raises(PassOrderError, match="datatypes_annotated"):
+        PassManager().run(hw, ["lower_to_integer_datapath"])
+    # and statically, when both are listed in the wrong order
+    with pytest.raises(PassOrderError, match="requires"):
+        PassManager().run(hw, ["lower_to_integer_datapath",
+                               "infer_datatypes"])
+
+
+def test_lowering_rejects_accumulator_wider_than_int32():
+    """Wide grids whose REACHABLE accumulator range exceeds int32 must be
+    rejected at lowering time — the runtime datapath accumulates in int32
+    and would otherwise wrap silently into a wrong (but 'successful')
+    artifact."""
+    from repro.core.graph import GraphBuildError
+
+    a16 = FixedPointSpec(16, 8, signed=False)
+    w16 = FixedPointSpec(16, 8, signed=True)
+    w = np.full((64, 8), 100.0, np.float32)      # on-grid, large codes
+    t = np.sort(np.random.default_rng(0).normal(size=(8, 15)),
+                axis=1).astype(np.float32)
+    g = _single_node_graph(
+        Node("mvau", ["x", "w", "t"], ["y"], {"out_base": 0, "out_scale": 0.25}),
+        {"w": w, "t": t}, {"x": a16, "w": w16, "t": None})
+    with pytest.raises(GraphBuildError, match="accumulator range"):
+        DT.LowerToIntegerDatapath(DT.InferDataTypes(g))
+
+
+def test_lowering_requires_seeded_annotations():
+    from repro.core.graph import GraphBuildError
+
+    g = Graph([Node("mul", ["x"], ["y"], {"value": 2.0})], ["x"], ["y"], {})
+    annotated = DT.InferDataTypes(g)        # all-None: nothing to lower from
+    with pytest.raises(GraphBuildError, match="no datatype annotations"):
+        DT.LowerToIntegerDatapath(annotated)
+
+
+# ---------------------------------------------------------------------------
+# Graph.dtypes maintenance
+# ---------------------------------------------------------------------------
+def test_dtypes_survive_copy_independently():
+    g = Graph([Node("mul", ["x"], ["y"], {"value": 1.0})], ["x"], ["y"], {})
+    g.dtypes["x"] = A4
+    g2 = g.copy()
+    g2.dtypes["x"] = W6
+    assert g.dtypes["x"] == A4 and g2.dtypes["x"] == W6
+
+
+def test_set_output_transfers_annotation():
+    n = Node("mul", ["x"], ["y"], {"value": 1.0})
+    g = Graph([n], ["x"], ["y"], {})
+    g.dtypes["y"] = A4
+    g.set_output(n, 0, "y_renamed")
+    assert g.dtypes["y_renamed"] == A4
+
+
+def test_remove_node_drops_dead_annotations():
+    n1 = Node("mul", ["x"], ["mid"], {"value": 1.0})
+    n2 = Node("mul", ["mid"], ["y"], {"value": 1.0})
+    g = Graph([n1, n2], ["x"], ["y"], {})
+    g.dtypes.update({"mid": A4, "y": A4})
+    g.set_input(n2, 0, "x")
+    g.remove_node(n1)
+    assert "mid" not in g.dtypes and g.dtypes["y"] == A4
+
+
+# ---------------------------------------------------------------------------
+# Storage plumbing the lowering relies on (pack_int4 / storage_dtype)
+# ---------------------------------------------------------------------------
+def test_pack_int4_odd_trailing_dim_rejected():
+    """The packed layout pairs nibbles along the trailing dim; an odd dim
+    has no valid pairing and must fail loudly, not silently truncate."""
+    with pytest.raises(ValueError, match="even"):
+        quant.pack_int4(jnp.zeros((4, 3), jnp.int32))
+    with pytest.raises(ValueError, match="even"):
+        quant.pack_int4(jnp.zeros((5,), jnp.int32))
+
+
+def test_pack_int4_roundtrip_extremes_and_leading_dims():
+    """Round-trip exactness at the code-range corners (incl. the -8/-1
+    sign-extension edge) and under arbitrary leading batch dims."""
+    corners = np.array([[-8, 7, -1, 0], [1, -2, 6, -7]], np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(quant.unpack_int4(quant.pack_int4(jnp.asarray(corners)))),
+        corners)
+    rng = np.random.default_rng(0)
+    q = rng.integers(-8, 8, size=(2, 3, 4, 6)).astype(np.int32)
+    packed = quant.pack_int4(jnp.asarray(q))
+    assert packed.shape == (2, 3, 4, 3) and packed.dtype == jnp.int8
+    np.testing.assert_array_equal(np.asarray(quant.unpack_int4(packed)), q)
+
+
+@pytest.mark.parametrize("bits,expected", [
+    (2, jnp.int8), (4, jnp.int8), (8, jnp.int8),          # <= 8: one byte
+    (9, jnp.int16), (16, jnp.int16),                      # <= 16: two
+    (17, jnp.int32), (32, jnp.int32),                     # <= 32: four
+])
+def test_storage_dtype_boundaries(bits, expected):
+    spec = quant.FixedPointSpec(bits, 0, signed=True)
+    assert quant.storage_dtype(spec) == expected
+    assert quant.storage_bytes_per_element(spec) == \
+        (0.5 if bits <= 4 else np.dtype(expected).itemsize)
+
+
+def test_storage_dtype_above_32_bits_is_an_error():
+    """Accumulator-width specs (> 32 bits, from datatype inference) are
+    annotations, not storage formats — asking for storage must fail."""
+    with pytest.raises(ValueError, match="storage"):
+        quant.storage_dtype(quant.FixedPointSpec(33, 0))
+
+
+# ---------------------------------------------------------------------------
+# Spec plumbing the inference relies on
+# ---------------------------------------------------------------------------
+def test_wide_accumulator_specs_allowed_but_not_storable():
+    wide = FixedPointSpec(42, 16)
+    assert wide.total_bits == 42
+    with pytest.raises(ValueError, match="storage"):
+        quant.storage_dtype(wide)
+    with pytest.raises(ValueError):
+        FixedPointSpec(65, 0)
+
+
+def test_threshold_counts_searchsorted_matches_dense():
+    rng = np.random.default_rng(0)
+    t = np.sort(rng.normal(size=(8, 128)).astype(np.float32), axis=1)
+    x = jnp.asarray(rng.normal(size=(3, 5, 8)).astype(np.float32))
+    fast = quant.threshold_counts(x, jnp.asarray(t))      # L=128: binary search
+    dense = jnp.sum(x[..., None] >= jnp.asarray(t), axis=-1)
+    np.testing.assert_array_equal(np.asarray(fast), np.asarray(dense))
+    # duplicate thresholds count multiply, exactly like the dense compare
+    td = np.sort(np.repeat(t[:, ::2], 2, axis=1), axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(quant.threshold_counts(x, jnp.asarray(td))),
+        np.asarray(jnp.sum(x[..., None] >= jnp.asarray(td), axis=-1)))

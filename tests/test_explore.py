@@ -1,0 +1,49 @@
+"""repro.explore.sweep — the bit-width DSE loop (ISSUE 2 acceptance):
+compiles a grid of (W, A) points through both datapaths and emits an
+accuracy/bytes/throughput frontier."""
+
+import json
+
+import pytest
+
+from repro.core.quant import QuantConfig
+from repro.explore import DEFAULT_GRID, config_for, pareto_frontier, sweep
+
+REQUIRED_KEYS = {"w_bits", "a_bits", "acc_mean", "acc_ci95",
+                 "weight_bytes_f32", "weight_bytes_int",
+                 "int_ms_per_batch", "int_batches_per_s",
+                 "bitexact_int_vs_f32"}
+
+
+def test_config_for_matches_paper_point():
+    cfg = config_for(6, 4)
+    paper = QuantConfig.paper_w6a4()
+    assert cfg.weight == paper.weight and cfg.act == paper.act
+
+
+def test_pareto_frontier_marks_dominated_points():
+    pts = [
+        {"acc_mean": 0.9, "weight_bytes_int": 100},
+        {"acc_mean": 0.8, "weight_bytes_int": 50},
+        {"acc_mean": 0.7, "weight_bytes_int": 80},   # dominated by point 1
+        {"acc_mean": 0.9, "weight_bytes_int": 120},  # dominated by point 0
+    ]
+    f = pareto_frontier(pts)
+    assert 0 in f and 1 in f
+    assert 2 not in f and 3 not in f
+
+
+@pytest.mark.slow
+def test_sweep_emits_frontier_over_four_points(tmp_path):
+    out = tmp_path / "frontier.json"
+    result = sweep(DEFAULT_GRID, width=4, steps=2, episodes=2,
+                   n_base=6, n_novel=5, batch=8, bench_batch=2,
+                   bench_iters=1, out_path=str(out), verbose=False)
+    assert len(result["points"]) >= 4
+    for p in result["points"]:
+        assert REQUIRED_KEYS <= set(p)
+        assert p["bitexact_int_vs_f32"]          # int == f32, every point
+        assert p["weight_bytes_int"] < p["weight_bytes_f32"]
+    assert result["frontier"], "at least one non-dominated point"
+    on_disk = json.loads(out.read_text())
+    assert on_disk["points"] == result["points"]

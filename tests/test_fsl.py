@@ -54,6 +54,25 @@ def test_fsl_pretraining_improves_over_random():
     assert acc_trained > 0.4, f"way above 5-way chance expected: {acc_trained}"
 
 
+def test_deploy_fused_ensemble_matches_qat_features():
+    """pipe.deploy() — one jitted program covering input quant + both flip
+    orientations — equals the QAT feature path exactly, on BOTH datapaths
+    (the deployed-accuracy contract, now without per-batch double dispatch).
+    """
+    from repro.models import resnet9
+
+    qcfg = QuantConfig.paper_w6a4()
+    pipe = FSLPipeline(width=8, qcfg=qcfg, easy_augment=True)
+    params = resnet9.init_params(jax.random.PRNGKey(4), 8)
+    x = jax.random.uniform(jax.random.PRNGKey(5), (2, 32, 32, 3))
+    want = np.asarray(pipe.features(params, x))
+    for datapath in ("f32", "int"):
+        feats = pipe.deploy(params, datapath=datapath)
+        assert feats.deployed_model.datapath == datapath
+        np.testing.assert_allclose(np.asarray(feats(x)), want,
+                                   rtol=1e-5, atol=1e-6)
+
+
 def test_serving_quantization_consistency():
     """w8 serving logits track bf16 logits (the numerics contract that lets
     the bit-width lever ship without retraining)."""
