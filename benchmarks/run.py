@@ -5,8 +5,9 @@ Prints ``name,metric,value`` CSV lines. ``--quick`` trims iteration counts
 
 The compile benchmark additionally serializes to ``BENCH_pr2.json`` at the
 repo root (interpreter vs f32 artifact vs int artifact latency, weight
-bytes per bit-width config) — the machine-readable perf trajectory
-successive PRs diff against.
+bytes per bit-width config) and the serve benchmark to ``BENCH_pr3.json``
+(single-request vs dynamically-batched serving throughput) — the
+machine-readable perf trajectory successive PRs diff against.
 """
 
 from __future__ import annotations
@@ -24,7 +25,8 @@ def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
-                    help="comma list: table2,table3,fig5,roofline,compile")
+                    help="comma list: table2,table3,fig5,roofline,compile,"
+                         "serve")
     ap.add_argument("--bench-json", default=None,
                     help="where the compile benchmark dict is written "
                          "(default: repo-root BENCH_pr2.json for full runs; "
@@ -61,6 +63,10 @@ def main(argv=None) -> None:
         with open(path, "w") as f:
             json.dump(payload, f, indent=2, sort_keys=True)
         print(f"compile,bench_json,{path}")
+    if want("serve"):
+        from benchmarks import serve_bench
+        serve_bench.write_json(serve_bench.run(quick=args.quick),
+                               quick=args.quick)
     if want("roofline"):
         from benchmarks import roofline
         try:

@@ -35,7 +35,8 @@ from repro.core import recipes as R
 from repro.core.graph import _EXECUTORS, Graph, GraphBuildError
 from repro.core.passes import PassManager, PassTrace
 
-__all__ = ["DeployedModel", "compile", "lower_graph"]
+__all__ = ["DeployedModel", "bucket_for", "compile", "lower_graph",
+           "normalize_buckets", "pow2_buckets"]
 
 
 def lower_graph(graph: Graph, interpret: Optional[bool] = None) -> Callable:
@@ -71,6 +72,43 @@ def lower_graph(graph: Graph, interpret: Optional[bool] = None) -> Callable:
     return apply_fn
 
 
+def bucket_for(n: int, buckets: Sequence[int]) -> int:
+    """Smallest bucket >= n. Buckets bound the set of batch shapes that ever
+    reach the jitted program, so the executable cache stays finite."""
+    if n <= 0:
+        raise ValueError(f"batch size must be positive, got {n}")
+    fit = [b for b in buckets if b >= n]
+    if not fit:
+        raise ValueError(f"batch {n} exceeds largest bucket "
+                         f"{max(buckets)}; raise max_batch / split upstream")
+    return min(fit)
+
+
+def pow2_buckets(max_batch: int) -> Tuple[int, ...]:
+    """(1, 2, 4, ..., max_batch) — max_batch is included even off-power."""
+    bs = []
+    b = 1
+    while b < max_batch:
+        bs.append(b)
+        b *= 2
+    bs.append(max_batch)
+    return tuple(bs)
+
+
+def normalize_buckets(buckets: Sequence[int]) -> Tuple[int, ...]:
+    """Dedup + sort a bucket list into the canonical tuple; rejects empty
+    lists and non-positive or non-integral sizes (a float bucket would
+    otherwise surface much later as a bogus pad length)."""
+    bs = set()
+    for b in buckets:
+        if int(b) != b or int(b) < 1:
+            raise ValueError(f"buckets must be positive ints, got {buckets!r}")
+        bs.add(int(b))
+    if not bs:
+        raise ValueError("buckets must be non-empty")
+    return tuple(sorted(bs))
+
+
 @dataclasses.dataclass
 class DeployedModel:
     """A compiled, executable deployment artifact.
@@ -79,6 +117,13 @@ class DeployedModel:
     graph has a single output).  ``apply`` is the raw traced function —
     ``jax.vmap(dm.apply)`` batches over a leading axis, and embedding
     ``dm.apply`` inside a larger jitted program fuses it with the caller.
+
+    ``jax.jit`` keys its executable cache on input shape, so every new batch
+    size silently RETRACES the whole program mid-flight — fatal for a
+    serving loop with arbitrary request sizes.  ``warmup(buckets, example)``
+    pre-compiles a fixed set of padded batch shapes and ``batched(x)`` pads
+    any batch up to its bucket and slices the result back, so steady-state
+    serving never traces again (``trace_count`` proves it).
     """
 
     graph: Graph
@@ -89,10 +134,72 @@ class DeployedModel:
     output_names: Tuple[str, ...]
     datapath: str = "f32"
     _jitted: Optional[Callable] = None
+    _buckets: Optional[Tuple[int, ...]] = None
+    _trace_count: int = 0
 
     def __post_init__(self):
+        base = self.apply
+
+        def counted(*inputs):
+            # Body runs only while TRACING under jit (or eagerly, if called
+            # raw) — steady-state jitted calls replay the compiled
+            # executable and never touch this counter.
+            self._trace_count += 1
+            return base(*inputs)
+
+        self.apply = counted
         if self._jitted is None:
-            self._jitted = jax.jit(self.apply)
+            self._jitted = jax.jit(counted)
+
+    @property
+    def trace_count(self) -> int:
+        """How many times the program body was traced (or run eagerly).
+        Flat after ``warmup`` == the serving loop never recompiles."""
+        return self._trace_count
+
+    @property
+    def buckets(self) -> Optional[Tuple[int, ...]]:
+        return self._buckets
+
+    def warmup(self, buckets: Sequence[int],
+               example: Union[jax.Array, np.ndarray]) -> Tuple[int, ...]:
+        """Pre-compile one executable per padded batch bucket.
+
+        ``example`` is a BATCHED input of any batch size (same rank as what
+        ``__call__`` takes) — its trailing dims/dtype define the per-sample
+        shape.  Returns the sorted bucket tuple now backing :meth:`batched`.
+        """
+        if len(self.input_names) != 1:
+            raise ValueError("warmup() supports single-input graphs; call "
+                             "the jitted program directly for multi-input")
+        ex = jnp.asarray(example)
+        if ex.ndim < 1:
+            raise ValueError("example must be batched (leading batch axis)")
+        sample = ex[0]
+        bs = normalize_buckets(buckets)
+        for b in bs:
+            x = jnp.zeros((b,) + sample.shape, sample.dtype)
+            jax.block_until_ready(self._jitted(x))
+        self._buckets = bs
+        return bs
+
+    def batched(self, x: Union[jax.Array, np.ndarray]):
+        """Run a batch through the bucket-padded executable cache: pad the
+        leading axis up to the nearest warmed bucket, execute, slice back.
+        Valid because every op in the HW graph is per-sample independent
+        (im2col/matmul/threshold/pool/GAP never mix batch rows)."""
+        if self._buckets is None:
+            raise RuntimeError("call warmup(buckets, example) before "
+                               "batched() — unpadded shapes retrace per size")
+        x = jnp.asarray(x)
+        n = x.shape[0]
+        b = bucket_for(n, self._buckets)
+        if b != n:
+            pad = [(0, b - n)] + [(0, 0)] * (x.ndim - 1)
+            x = jnp.pad(x, pad)
+        outs = self._jitted(x)
+        outs = tuple(o[:n] for o in outs)
+        return outs[0] if len(self.output_names) == 1 else outs
 
     def __call__(self, *inputs, **feeds):
         if feeds:
@@ -122,16 +229,27 @@ class DeployedModel:
                        for v in self.graph.initializers.values()))
 
     def throughput(self, *inputs, iters: int = 20) -> Dict[str, float]:
-        """Measured wall-clock of the jitted program on ``inputs``:
-        ``{"ms_per_call", "calls_per_s"}`` (median-free simple mean after a
-        warm-up call, like benchmarks/compile_bench.py)."""
+        """Measured wall-clock of the jitted program on BATCHED ``inputs``
+        (leading axis = batch; an unbatched sample would report its first
+        dim as the batch size): ``{"ms_per_call", "calls_per_s", "batch",
+        "bucket"}`` (simple mean after a warm-up call, like
+        benchmarks/compile_bench.py).  ``bucket`` is the padded bucket the
+        measurement would serve through (equal to ``batch`` when no buckets
+        are warmed or the batch exceeds them) — so a reported number is
+        attributable to ONE executable in the bucket cache."""
+        n = int(jnp.shape(inputs[0])[0]) if inputs and jnp.ndim(inputs[0]) else 1
         jax.block_until_ready(self._jitted(*inputs))     # warm-up / compile
         t0 = time.perf_counter()
         for _ in range(max(iters, 1)):
             out = self._jitted(*inputs)
         jax.block_until_ready(out)
         dt = (time.perf_counter() - t0) / max(iters, 1)
-        return {"ms_per_call": dt * 1e3, "calls_per_s": 1.0 / dt}
+        # a batch beyond the warmed buckets still measures fine (jit takes
+        # any shape) — it just isn't attributable to a cached bucket
+        bucket = (bucket_for(n, self._buckets)
+                  if self._buckets and n <= self._buckets[-1] else n)
+        return {"ms_per_call": dt * 1e3, "calls_per_s": 1.0 / dt,
+                "batch": float(n), "bucket": float(bucket)}
 
     def report(self, sample_input=None, iters: int = 20) -> str:
         ops = ", ".join(f"{k}×{v}" for k, v in sorted(self.op_counts().items()))

@@ -2,9 +2,21 @@
 
 The backbone (FPGA/TPU side) emits feature vectors; the NCM head lives on
 the host: support features → per-class means; query features → nearest mean.
-Features are L2-normalized first (the EASY recipe the paper builds on)."""
+Features are L2-normalized first (the EASY recipe the paper builds on).
+
+Accumulation order is CANONICAL: per-class sums are a strict left fold over
+support rows in presentation order (``running_update``), so the online
+:class:`repro.serve.PrototypeStore` — which receives the same rows in the
+same order, possibly chunked across requests — reproduces ``class_means``
+**bit-for-bit**.  f32 addition is not associative; a matmul-reduced sum
+(the previous implementation) and a streaming sum would drift apart on
+real feature vectors, and "deployed == offline" would silently become
+"deployed ≈ offline".
+"""
 
 from __future__ import annotations
+
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
@@ -14,14 +26,43 @@ def _l2(x: jax.Array) -> jax.Array:
     return x / jnp.maximum(jnp.linalg.norm(x, axis=-1, keepdims=True), 1e-8)
 
 
+def running_update(sums: jax.Array, counts: jax.Array, features: jax.Array,
+                   labels: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Fold a chunk of support rows into per-class running ``(sums, counts)``.
+
+    ``sums``: (W, D) f32 per-class sums of L2-normalized features;
+    ``counts``: (W,) f32 per-class row counts;
+    ``features``: (N, D) raw backbone features; ``labels``: (N,) way indices.
+
+    Rows are added STRICTLY sequentially in presentation order (lax.scan),
+    so folding one batch equals folding the same rows split across any
+    number of chunks — the bit-for-bit contract the online store relies on.
+    """
+    f = _l2(features.astype(jnp.float32))
+    labels = labels.astype(jnp.int32)
+
+    def step(carry, xs):
+        s, c = carry
+        row, lab = xs
+        return (s.at[lab].add(row), c.at[lab].add(1.0)), None
+
+    (sums, counts), _ = jax.lax.scan(step, (sums, counts), (f, labels))
+    return sums, counts
+
+
+def finalize_means(sums: jax.Array, counts: jax.Array) -> jax.Array:
+    """(W, D) running sums + (W,) counts -> (W, D) L2-normalized means."""
+    return _l2(sums / jnp.maximum(counts[:, None], 1.0))
+
+
 def class_means(features: jax.Array, labels: jax.Array, n_way: int
                 ) -> jax.Array:
     """(N, D) support features + (N,) way-labels -> (n_way, D) means."""
-    f = _l2(features.astype(jnp.float32))
-    one = jax.nn.one_hot(labels, n_way, dtype=jnp.float32)       # (N, W)
-    sums = one.T @ f                                             # (W, D)
-    counts = jnp.maximum(one.sum(0)[:, None], 1.0)
-    return _l2(sums / counts)
+    d = features.shape[-1]
+    sums = jnp.zeros((n_way, d), jnp.float32)
+    counts = jnp.zeros((n_way,), jnp.float32)
+    sums, counts = running_update(sums, counts, features, labels)
+    return finalize_means(sums, counts)
 
 
 def ncm_classify(query_features: jax.Array, means: jax.Array) -> jax.Array:

@@ -10,6 +10,7 @@ deployed graph, so the accuracy measured here is the deployed accuracy.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -31,6 +32,14 @@ class FSLPipeline:
     k_shot: int = 5
     n_query: int = 15
     easy_augment: bool = True   # EASY-style augmented shots (flip ensembling)
+    # deploy() memo: (id(params), datapath) -> feats fn, LRU-bounded — each
+    # entry pins a full param tree + compiled artifact, so an unbounded map
+    # would leak a model per train step under deploy-after-update loops.
+    # The params ref is kept inside the value so the id can never be
+    # recycled while cached.
+    deploy_cache_size: int = 4
+    _deploy_cache: "OrderedDict" = dataclasses.field(
+        default_factory=lambda: OrderedDict(), repr=False)
 
     def features(self, params, x: jax.Array) -> jax.Array:
         f = resnet9.forward(params, x, self.qcfg, self.width)
@@ -51,6 +60,16 @@ class FSLPipeline:
         both orientations, the sum) traces into ONE jitted program, so per
         episode batch there is a single dispatch instead of two jitted
         calls plus eager ``fake_quant`` glue.
+
+        Repeated calls with the SAME params object and datapath return the
+        SAME artifact (memoized per ``(id(params), datapath)``): the serve
+        engine and ``evaluate_episodes`` share one compiled program instead
+        of re-running the whole pass pipeline per caller.
+
+        The returned function carries serving hooks: ``.deployed_model``,
+        ``.trace_count()`` (fused-program trace counter), and
+        ``.warmup(buckets, img=...)`` pre-compiling one executable per
+        padded batch bucket so steady-state serving never retraces.
         """
         from repro.core.deploy import compile as compile_graph
         from repro.core.quant import fake_quant
@@ -58,12 +77,19 @@ class FSLPipeline:
         if self.qcfg is None:
             raise ValueError("deploy() needs a QuantConfig: the compiled "
                              "graph bakes thresholds for a specific grid")
+        key = (id(params), datapath)
+        cached = self._deploy_cache.get(key)
+        if cached is not None and cached.params is params:
+            self._deploy_cache.move_to_end(key)
+            return cached
         dm = compile_graph(params, self.qcfg, recipe="resnet9",
                            datapath=datapath)
         act = self.qcfg.act
         flip = self.easy_augment
+        traces = [0]
 
         def _features(x: jax.Array) -> jax.Array:
+            traces[0] += 1          # runs at trace time only (jit below)
             f = dm.apply(fake_quant(x, act))[0]
             if flip:
                 f = f + dm.apply(fake_quant(x[:, :, ::-1], act))[0]
@@ -74,7 +100,22 @@ class FSLPipeline:
         def feats(x: jax.Array) -> jax.Array:
             return fused(x)
 
+        def warmup(buckets, img: int = 32) -> tuple:
+            from repro.core.deploy import normalize_buckets
+
+            bs = normalize_buckets(buckets)
+            for b in bs:
+                jax.block_until_ready(
+                    fused(jnp.zeros((b, img, img, 3), jnp.float32)))
+            return bs
+
         feats.deployed_model = dm
+        feats.params = params
+        feats.trace_count = lambda: traces[0]
+        feats.warmup = warmup
+        self._deploy_cache[key] = feats
+        while len(self._deploy_cache) > max(self.deploy_cache_size, 1):
+            self._deploy_cache.popitem(last=False)
         return feats
 
 

@@ -1,0 +1,33 @@
+"""repro.serve — real-time few-shot serving runtime.
+
+The runtime layer over ``repro.compile`` artifacts (DESIGN.md §9)::
+
+    from repro.serve import ArtifactRegistry, ServeEngine
+
+    reg = ArtifactRegistry()
+    reg.register("w6a4-int", pipe.deploy(params, datapath="int"),
+                 default=True)
+    with ServeEngine(reg, max_batch=64) as eng:
+        eng.warmup(img=32)                        # compile every bucket
+        eng.submit_register("pelican", shots).result()   # novel class, live
+        print(eng.submit_classify(frame).result().class_ids)
+        print(eng.metrics.report())
+
+``ServeEngine`` coalesces register/classify traffic into bucket-padded
+batches (zero retraces after warmup), ``PrototypeStore`` keeps online class
+means bit-for-bit equal to offline NCM, and ``ArtifactRegistry`` serves
+several bit-width artifacts side by side with atomic default hot-swap.
+
+Not to be confused with ``repro.launch.serve`` — the transformer decode
+serving demo; THIS package is the paper's few-shot runtime.
+"""
+
+from repro.serve.bucketing import bucket_for, pad_to_bucket, pow2_buckets
+from repro.serve.engine import ClassifyResult, ServeEngine, ServeOverload
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import ArtifactRegistry, ServedArtifact
+from repro.serve.store import PrototypeStore
+
+__all__ = ["ArtifactRegistry", "ClassifyResult", "PrototypeStore",
+           "ServeEngine", "ServeMetrics", "ServeOverload", "ServedArtifact",
+           "bucket_for", "pad_to_bucket", "pow2_buckets"]

@@ -1,0 +1,338 @@
+"""ServeEngine — real-time few-shot serving with dynamic batching.
+
+The paper's deployment loop (support shots and queries arriving live at a
+camera-fed accelerator) under production traffic discipline:
+
+* **Admission**: a bounded FIFO queue.  When it is full, ``submit_*``
+  raises :class:`ServeOverload` (or blocks up to ``timeout``) — load sheds
+  at the door instead of growing an unbounded backlog.
+* **Coalescing**: a worker thread drains the queue, packing requests —
+  register and classify alike, they all need backbone features — into one
+  batch of up to ``max_batch`` samples, waiting at most ``batch_wait_ms``
+  for stragglers.  Batches are padded to power-of-two buckets so only a
+  fixed shape set ever reaches the jitted artifact: after :meth:`warmup`
+  the executable cache is complete and **nothing retraces under load**
+  (``trace_counts`` proves it; the soak test asserts a zero delta).
+* **Semantics**: requests take effect in strict arrival order — a classify
+  sees exactly the registers admitted before it, whether or not they rode
+  the same batch.  Combined with the store's canonical left-fold, a served
+  prototype is bit-for-bit what an offline NCM over the same shots would
+  compute.
+* **A/B**: each request may name an artifact from the
+  :class:`ArtifactRegistry` (e.g. ``w6a4-int`` vs ``f32``); unnamed
+  requests follow the registry default, which hot-swaps atomically at
+  batch granularity.
+
+Distinct from ``repro.launch.serve`` (the LLM decode-loop demo): this is
+the few-shot runtime over ``repro.compile`` artifacts.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import queue
+import threading
+import time
+from concurrent.futures import Future
+from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.deploy import normalize_buckets, pow2_buckets
+from repro.serve.bucketing import pad_to_bucket
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import ArtifactRegistry
+
+__all__ = ["ClassifyResult", "ServeEngine", "ServeOverload"]
+
+
+class ServeOverload(RuntimeError):
+    """Admission queue full — shed load or retry with backoff."""
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassifyResult:
+    """Per-query predictions against the artifact's current store."""
+
+    class_ids: List[Hashable]       # len n, registered class ids
+    sims: np.ndarray                # (n, C) cosine similarities
+    artifact: str
+
+
+@dataclasses.dataclass
+class _Request:
+    kind: str                       # "register" | "classify"
+    x: np.ndarray                   # (n, H, W, C)
+    class_id: Optional[Hashable]
+    artifact: Optional[str]
+    future: Future
+    t_submit: float
+
+    @property
+    def n(self) -> int:
+        return self.x.shape[0]
+
+
+class ServeEngine:
+    """Dynamic-batching server over an :class:`ArtifactRegistry`."""
+
+    def __init__(self, registry: ArtifactRegistry, *,
+                 max_batch: int = 64, max_queue: int = 256,
+                 batch_wait_ms: float = 2.0,
+                 buckets: Optional[Sequence[int]] = None,
+                 metrics_window: int = 10_000,
+                 start: bool = True):
+        self.registry = registry
+        self.max_batch = int(max_batch)
+        self.buckets = (normalize_buckets(buckets) if buckets
+                        else pow2_buckets(self.max_batch))
+        if self.buckets[-1] < self.max_batch:
+            raise ValueError(f"largest bucket {self.buckets[-1]} < "
+                             f"max_batch {self.max_batch}")
+        self.batch_wait_s = batch_wait_ms / 1e3
+        self.metrics = ServeMetrics(window=metrics_window)
+        self._queue: "queue.Queue[_Request]" = queue.Queue(maxsize=max_queue)
+        self._pending: Optional[_Request] = None     # coalescer carry slot
+        self._stop = threading.Event()
+        self._worker: Optional[threading.Thread] = None
+        if start:
+            self.start()
+
+    # -- lifecycle ----------------------------------------------------------
+    def start(self) -> None:
+        if self._worker is not None and self._worker.is_alive():
+            return
+        self._stop.clear()
+        self._worker = threading.Thread(target=self._run, name="serve-engine",
+                                        daemon=True)
+        self._worker.start()
+
+    def stop(self, drain: bool = True) -> None:
+        """Stop the worker; ``drain=True`` serves everything already
+        admitted first, ``drain=False`` fails queued requests."""
+        if not drain:
+            self._fail_queued(ServeOverload("engine stopped"))
+        self._stop.set()
+        if self._worker is not None:
+            self._worker.join(timeout=60.0)
+            self._worker = None
+
+    def __enter__(self) -> "ServeEngine":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop(drain=not any(exc))
+
+    def warmup(self, img: int = 32, buckets: Optional[Sequence[int]] = None
+               ) -> Dict[str, Optional[int]]:
+        """Compile every registered artifact at every bucket shape, then
+        reset the throughput clock.  Returns the post-warmup trace counts —
+        the baseline a zero-retrace assertion diffs against.
+
+        A ``buckets`` override REPLACES the engine's bucket set (padding
+        must only ever target warmed shapes — warming a subset while
+        padding to the old set would quietly reintroduce mid-flight
+        retraces), so it still has to cover ``max_batch``."""
+        bs = self.buckets
+        if buckets is not None:
+            bs = normalize_buckets(buckets)
+            if bs[-1] < self.max_batch:
+                raise ValueError(f"largest warmup bucket {bs[-1]} < "
+                                 f"max_batch {self.max_batch}")
+        for name in self.registry.names():
+            self.registry.get(name).warmup(bs, img=img)
+        # publish only AFTER compiling: concurrent traffic keeps padding to
+        # the old (fully warmed) set until every new shape has an executable
+        self.buckets = bs
+        self.metrics.reset_clock()
+        return self.trace_counts()
+
+    def trace_counts(self) -> Dict[str, Optional[int]]:
+        return self.registry.trace_counts()
+
+    # -- admission ----------------------------------------------------------
+    def submit_register(self, class_id: Hashable, x,
+                        artifact: Optional[str] = None,
+                        timeout: Optional[float] = None) -> Future:
+        """Queue support images (k, H, W, C) for online registration of
+        ``class_id``.  Future resolves to the class's new shot count."""
+        return self._submit("register", x, class_id, artifact, timeout)
+
+    def submit_classify(self, x, artifact: Optional[str] = None,
+                        timeout: Optional[float] = None) -> Future:
+        """Queue query images (n, H, W, C).  Future resolves to a
+        :class:`ClassifyResult`."""
+        return self._submit("classify", x, None, artifact, timeout)
+
+    def _submit(self, kind, x, class_id, artifact, timeout) -> Future:
+        x = np.asarray(x, np.float32)
+        if x.ndim == 3:
+            x = x[None]
+        if x.ndim != 4 or x.shape[0] == 0:
+            raise ValueError(f"expected (n, H, W, C) images, got {x.shape}")
+        if x.shape[0] > self.max_batch:
+            raise ValueError(f"request of {x.shape[0]} samples exceeds "
+                             f"max_batch={self.max_batch}; split it")
+        if self._stop.is_set():
+            # a stopped engine has no drain — admitting would hang the
+            # future forever.  (Submitting BEFORE the first start() is
+            # allowed: the queue holds until the worker comes up.)
+            self.metrics.record_rejected()
+            raise ServeOverload("engine is stopped; call start() first")
+        req = _Request(kind, x, class_id, artifact, Future(),
+                       time.perf_counter())
+        try:
+            if timeout is None:
+                self._queue.put_nowait(req)
+            else:
+                self._queue.put(req, timeout=timeout)
+        except queue.Full:
+            self.metrics.record_rejected()
+            raise ServeOverload(
+                f"admission queue full ({self._queue.maxsize}); "
+                f"{self.metrics.completed} served so far") from None
+        self.metrics.observe_queue_depth(self._queue.qsize())
+        return req.future
+
+    # -- worker -------------------------------------------------------------
+    def _fulfill(self, req: _Request, value) -> None:
+        """Resolve a request's future, tolerating client-side ``cancel()``:
+        a Future cancelled while queued refuses set_result with
+        InvalidStateError, which must never kill the worker thread.  (State
+        changes are best-effort against cancellation: a register whose
+        future was cancelled mid-batch has still updated the store.)"""
+        if req.future.set_running_or_notify_cancel():
+            req.future.set_result(value)
+            self.metrics.record_request(time.perf_counter() - req.t_submit)
+        else:
+            self.metrics.record_cancelled()
+
+    def _fail(self, req: _Request, exc: Exception) -> None:
+        if req.future.set_running_or_notify_cancel():
+            req.future.set_exception(exc)
+            self.metrics.record_request(0.0, ok=False)
+        else:
+            self.metrics.record_cancelled()
+
+    def _run(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            try:
+                self._process(batch)
+            except Exception as e:                    # noqa: BLE001
+                # _process fails futures per group; this is the backstop
+                # that keeps the worker alive no matter what — a dead
+                # worker turns every future submit into a hang
+                for r in batch:
+                    if not r.future.done():
+                        self._fail(r, e)
+
+    def _next_batch(self) -> Optional[List[_Request]]:
+        first = self._pending
+        self._pending = None
+        while first is None:
+            try:
+                first = self._queue.get(timeout=0.05)
+            except queue.Empty:
+                if self._stop.is_set():
+                    return None
+                continue
+        batch, total = [first], first.n
+        deadline = time.perf_counter() + self.batch_wait_s
+        while total < self.max_batch:
+            rem = deadline - time.perf_counter()
+            try:
+                nxt = self._queue.get_nowait() if rem <= 0 else \
+                    self._queue.get(timeout=rem)
+            except queue.Empty:
+                break
+            if total + nxt.n > self.max_batch:
+                self._pending = nxt         # strict FIFO: head of next batch
+                break
+            batch.append(nxt)
+            total += nxt.n
+        return batch
+
+    def _process(self, batch: List[_Request]) -> None:
+        # Group by RESOLVED artifact (default resolved once per batch, so a
+        # hot-swap lands between batches and "artifact=None" requests join
+        # the default's group — arrival order within one artifact survives
+        # however callers named it), preserving arrival order inside each.
+        default = None
+        groups: Dict[str, List[_Request]] = {}
+        arts: Dict[str, Any] = {}
+        for r in batch:
+            try:
+                if r.artifact is None:
+                    if default is None:
+                        default = self.registry.get(None)
+                    art = default
+                else:
+                    art = self.registry.get(r.artifact)
+            except KeyError as e:
+                self._fail(r, e)
+                continue
+            arts[art.name] = art
+            groups.setdefault(art.name, []).append(r)
+        for name, reqs in groups.items():
+            self._run_group(arts[name], reqs)
+
+    def _run_group(self, art, reqs: List[_Request]) -> None:
+        try:
+            x = np.concatenate([r.x for r in reqs], axis=0) \
+                if len(reqs) > 1 else reqs[0].x
+            padded, n_real, bucket = pad_to_bucket(x, self.buckets)
+            feats = np.asarray(art.feats(padded))[:n_real]
+            self.metrics.record_batch(n_real, bucket)
+        except Exception as e:                        # noqa: BLE001
+            for r in reqs:
+                self._fail(r, e)
+            return
+        # Strict arrival order, but consecutive classifies between two
+        # registers see the SAME store state — classify them as ONE run
+        # (one NCM head call per run, not per request; at 64 single-frame
+        # queries per batch the per-request head dispatch would otherwise
+        # cost more than the backbone batch itself).
+        off = 0
+        run: List[Tuple[_Request, int, int]] = []     # (req, start, end)
+
+        def flush_run() -> None:
+            if not run:
+                return
+            lo, hi = run[0][1], run[-1][2]
+            try:
+                ids, sims = art.store.classify(feats[lo:hi])
+            except Exception as exc:                  # noqa: BLE001
+                for r, _, _ in run:
+                    self._fail(r, exc)
+                run.clear()
+                return
+            for r, s, e in run:
+                self._fulfill(r, ClassifyResult(
+                    ids[s - lo:e - lo], sims[s - lo:e - lo], art.name))
+            run.clear()
+
+        for r in reqs:
+            start, off = off, off + r.n
+            if r.kind == "classify":
+                run.append((r, start, off))
+                continue
+            flush_run()
+            try:
+                out = art.store.register(r.class_id, feats[start:off])
+            except Exception as exc:                  # noqa: BLE001
+                self._fail(r, exc)
+                continue
+            self._fulfill(r, out)
+        flush_run()
+
+    def _fail_queued(self, exc: Exception) -> None:
+        while True:
+            try:
+                r = self._queue.get_nowait()
+            except queue.Empty:
+                return
+            self._fail(r, exc)

@@ -1,0 +1,111 @@
+"""Serving metrics — per-request latency percentiles and steady-state
+throughput, the numbers the paper's Table III becomes under load.
+
+A :class:`ServeMetrics` is shared between the engine's worker thread and
+callers of :meth:`snapshot`; all mutation happens under one lock and the
+latency reservoir is bounded, so a soak run can push millions of requests
+without the metrics object growing with them.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Dict, Optional
+
+__all__ = ["ServeMetrics", "percentile"]
+
+
+def percentile(sorted_vals, p: float) -> float:
+    """Nearest-rank percentile on an already-sorted sequence (p in [0,100])."""
+    if not sorted_vals:
+        return float("nan")
+    k = max(0, min(len(sorted_vals) - 1,
+                   int(round(p / 100.0 * (len(sorted_vals) - 1)))))
+    return float(sorted_vals[k])
+
+
+class ServeMetrics:
+    """Counters + bounded latency reservoir for one :class:`ServeEngine`."""
+
+    def __init__(self, window: int = 10_000):
+        self._lock = threading.Lock()
+        self._lat = deque(maxlen=window)       # seconds, completed requests
+        self._t0 = time.perf_counter()
+        self.completed = 0
+        self.rejected = 0
+        self.failed = 0
+        self.cancelled = 0
+        self.batches = 0
+        self.batched_samples = 0               # real samples through backbone
+        self.padded_samples = 0                # wasted rows from bucketing
+        self.max_queue_depth = 0
+
+    def record_request(self, latency_s: float, ok: bool = True) -> None:
+        with self._lock:
+            if ok:
+                self.completed += 1
+                self._lat.append(latency_s)
+            else:
+                self.failed += 1
+
+    def record_batch(self, n_real: int, bucket: int) -> None:
+        with self._lock:
+            self.batches += 1
+            self.batched_samples += n_real
+            self.padded_samples += bucket - n_real
+
+    def record_rejected(self) -> None:
+        with self._lock:
+            self.rejected += 1
+
+    def record_cancelled(self) -> None:
+        """Client cancelled the future while the request was queued."""
+        with self._lock:
+            self.cancelled += 1
+
+    def observe_queue_depth(self, depth: int) -> None:
+        with self._lock:
+            if depth > self.max_queue_depth:
+                self.max_queue_depth = depth
+
+    def reset_clock(self) -> None:
+        """Restart the throughput window (e.g. right after warmup) without
+        dropping counters."""
+        with self._lock:
+            self._t0 = time.perf_counter()
+            self.completed = 0
+            self._lat.clear()
+
+    def snapshot(self) -> Dict[str, float]:
+        with self._lock:
+            lat = sorted(self._lat)
+            elapsed = max(time.perf_counter() - self._t0, 1e-9)
+            mean_batch = (self.batched_samples / self.batches
+                          if self.batches else float("nan"))
+            return {
+                "completed": float(self.completed),
+                "rejected": float(self.rejected),
+                "failed": float(self.failed),
+                "cancelled": float(self.cancelled),
+                "batches": float(self.batches),
+                "mean_batch": float(mean_batch),
+                "padded_frac": (self.padded_samples /
+                                max(self.batched_samples + self.padded_samples, 1)),
+                "max_queue_depth": float(self.max_queue_depth),
+                "throughput_rps": self.completed / elapsed,
+                "p50_ms": percentile(lat, 50) * 1e3,
+                "p95_ms": percentile(lat, 95) * 1e3,
+                "p99_ms": percentile(lat, 99) * 1e3,
+            }
+
+    def report(self) -> str:
+        s = self.snapshot()
+        return (f"serve: {int(s['completed'])} ok / {int(s['rejected'])} "
+                f"rejected / {int(s['failed'])} failed | "
+                f"{s['throughput_rps']:.1f} req/s | "
+                f"p50 {s['p50_ms']:.2f} ms, p95 {s['p95_ms']:.2f} ms, "
+                f"p99 {s['p99_ms']:.2f} ms | mean batch {s['mean_batch']:.1f} "
+                f"(pad {s['padded_frac']:.0%}), "
+                f"queue<= {int(s['max_queue_depth'])}")

@@ -1,0 +1,115 @@
+"""Multi-artifact registry — several compiled backbones served side by side.
+
+``repro.explore.sweep`` emits a Pareto frontier of bit-width points; serving
+them is an A/B question, not a rebuild: each point's compiled artifact
+(e.g. ``w6a4-int``, ``w8a8-int``, ``f32`` reference) registers under a name
+together with its OWN :class:`PrototypeStore` (features from different
+numeric grids must never share prototypes).  ``set_default`` /
+``register(..., default=True)`` hot-swaps which artifact anonymous requests
+hit — a single reference assignment under the lock, atomic with respect to
+the engine's per-batch ``get()``: every batch runs wholly on the old or
+wholly on the new artifact, never a mix.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+from typing import Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.deploy import DeployedModel
+from repro.serve.store import PrototypeStore
+
+__all__ = ["ArtifactRegistry", "ServedArtifact"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ServedArtifact:
+    """One servable backbone: a batched feature fn + its prototype state.
+
+    ``feats`` is any ``(n, H, W, C) -> (n, D)`` callable that retraces at
+    most once per batch shape — ``FSLPipeline.deploy()``'s fused fn or a
+    raw ``DeployedModel``.  ``trace_count``/``warmup`` hooks are read off
+    the callable when present (the engine's zero-retrace accounting).
+    """
+
+    name: str
+    feats: Callable
+    store: PrototypeStore
+
+    def trace_count(self) -> Optional[int]:
+        if isinstance(self.feats, DeployedModel):
+            return self.feats.trace_count
+        fn = getattr(self.feats, "trace_count", None)
+        if fn is not None:
+            return int(fn())
+        dm = getattr(self.feats, "deployed_model", None)
+        return int(dm.trace_count) if dm is not None else None
+
+    def warmup(self, buckets, img: int) -> None:
+        if isinstance(self.feats, DeployedModel):
+            self.feats.warmup(
+                buckets, example=np.zeros((1, img, img, 3), np.float32))
+            return
+        fn = getattr(self.feats, "warmup", None)
+        if fn is not None:
+            fn(buckets, img=img)
+
+
+class ArtifactRegistry:
+    """Named, hot-swappable set of :class:`ServedArtifact`."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._artifacts: Dict[str, ServedArtifact] = {}
+        self._default: Optional[str] = None
+
+    def register(self, name: str, feats: Callable, *,
+                 store: Optional[PrototypeStore] = None,
+                 default: bool = False) -> ServedArtifact:
+        """Add (or atomically replace) an artifact.  The first registration
+        becomes the default; ``default=True`` swaps it explicitly."""
+        art = ServedArtifact(name, feats, store or PrototypeStore())
+        with self._lock:
+            self._artifacts[name] = art
+            if default or self._default is None:
+                self._default = name
+        return art
+
+    def set_default(self, name: str) -> None:
+        with self._lock:
+            if name not in self._artifacts:
+                raise KeyError(f"unknown artifact {name!r}; have "
+                               f"{sorted(self._artifacts)}")
+            self._default = name
+
+    @property
+    def default_name(self) -> Optional[str]:
+        with self._lock:
+            return self._default
+
+    def get(self, name: Optional[str] = None) -> ServedArtifact:
+        with self._lock:
+            key = name if name is not None else self._default
+            if key is None:
+                raise KeyError("registry is empty — register an artifact")
+            try:
+                return self._artifacts[key]
+            except KeyError:
+                raise KeyError(f"unknown artifact {key!r}; have "
+                               f"{sorted(self._artifacts)}") from None
+
+    def names(self) -> Tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._artifacts))
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._artifacts)
+
+    def trace_counts(self) -> Dict[str, Optional[int]]:
+        with self._lock:
+            arts = list(self._artifacts.values())
+        return {a.name: a.trace_count() for a in arts}

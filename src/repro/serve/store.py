@@ -1,0 +1,122 @@
+"""Online prototype store — the paper's real-time few-shot loop as state.
+
+Support shots arrive at runtime; ``register(class_id, features)`` folds them
+into per-class running ``(sum, count)`` and the class is immediately
+servable — no retraining, no retracing, no batch recompute.  The folds go
+through :func:`repro.fsl.ncm.running_update`, the SAME strict left fold
+``class_means`` uses, so the online store is **bit-for-bit** equal to an
+offline NCM over the concatenated support set presented in the same order
+(tested in ``tests/test_serve.py`` including single-shot and imbalanced
+episodes).  Per-class accumulators are independent rows, so interleaving
+registrations ACROSS classes cannot perturb any class's prototype.
+
+The store holds features, not images: the engine runs the backbone (any
+artifact of the registry), then routes feature rows here.  One store per
+artifact — features from different bit-width datapaths live on different
+numeric grids and must never share prototypes.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fsl import ncm
+
+__all__ = ["PrototypeStore"]
+
+
+class PrototypeStore:
+    """Thread-safe incremental Nearest-Class-Mean state.
+
+    ``register`` is O(shots) and ``classify`` is one (Q, C) similarity
+    against a cached prototype matrix rebuilt only when the store changed.
+    """
+
+    def __init__(self):
+        self._lock = threading.RLock()
+        self._sums: Dict[Hashable, np.ndarray] = {}     # class -> (D,) f32
+        self._counts: Dict[Hashable, int] = {}
+        self._order: List[Hashable] = []                # registration order
+        self._means: Optional[np.ndarray] = None        # cache, (C, D)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._order)
+
+    @property
+    def class_ids(self) -> Tuple[Hashable, ...]:
+        with self._lock:
+            return tuple(self._order)
+
+    def counts(self) -> Dict[Hashable, int]:
+        with self._lock:
+            return dict(self._counts)
+
+    def register(self, class_id: Hashable, features) -> int:
+        """Fold (k, D) backbone features into ``class_id``'s running mean;
+        returns the class's new shot count.  A 1-D (D,) single shot is
+        accepted as (1, D)."""
+        f = np.asarray(features, np.float32)
+        if f.ndim == 1:
+            f = f[None, :]
+        if f.ndim != 2 or f.shape[0] == 0:
+            raise ValueError(f"features must be (k, D) with k >= 1, "
+                             f"got shape {f.shape}")
+        with self._lock:
+            if class_id not in self._sums:
+                self._sums[class_id] = np.zeros((f.shape[1],), np.float32)
+                self._counts[class_id] = 0
+                self._order.append(class_id)
+            elif self._sums[class_id].shape[0] != f.shape[1]:
+                raise ValueError(
+                    f"feature dim {f.shape[1]} != store dim "
+                    f"{self._sums[class_id].shape[0]} for class {class_id!r}")
+            # one-row view of the canonical fold: labels are all 0, the
+            # (1, D)/(1,) carry is this class's accumulator
+            sums, counts = ncm.running_update(
+                jnp.asarray(self._sums[class_id][None, :]),
+                jnp.asarray([float(self._counts[class_id])]),
+                jnp.asarray(f), jnp.zeros((f.shape[0],), jnp.int32))
+            self._sums[class_id] = np.asarray(sums[0])
+            self._counts[class_id] = int(np.asarray(counts[0]))
+            self._means = None
+            return self._counts[class_id]
+
+    def prototypes(self) -> Tuple[np.ndarray, Tuple[Hashable, ...]]:
+        """(C, D) L2-normalized class means + matching class ids, in
+        registration order (the store's stable way-index contract)."""
+        with self._lock:
+            if not self._order:
+                raise RuntimeError("no classes registered yet")
+            if self._means is None:
+                sums = jnp.asarray(
+                    np.stack([self._sums[c] for c in self._order]))
+                counts = jnp.asarray(
+                    [float(self._counts[c]) for c in self._order])
+                self._means = np.asarray(ncm.finalize_means(sums, counts))
+            return self._means, tuple(self._order)
+
+    def classify(self, query_features
+                 ) -> Tuple[List[Hashable], np.ndarray]:
+        """NCM over the current store: (n, D) queries -> (class ids, (n, C)
+        cosine similarities).  A 1-D query is accepted as one row."""
+        q = np.asarray(query_features, np.float32)
+        if q.ndim == 1:
+            q = q[None, :]
+        means, ids = self.prototypes()
+        # jnp end to end so a served batch agrees bitwise with an offline
+        # ncm_classify over the same rows (same XLA reduction, same shapes)
+        sims = np.asarray(ncm._l2(jnp.asarray(q)) @ jnp.asarray(means).T)
+        pred = sims.argmax(axis=-1)
+        return [ids[int(i)] for i in pred], sims
+
+    def reset(self) -> None:
+        with self._lock:
+            self._sums.clear()
+            self._counts.clear()
+            self._order.clear()
+            self._means = None

@@ -33,6 +33,41 @@ def test_ncm_scale_invariance():
     np.testing.assert_array_equal(np.asarray(m1), np.asarray(m2))
 
 
+def test_class_means_equals_chunked_running_update():
+    """class_means is a strict left fold (running_update), so folding the
+    same rows in the same order across ANY chunking is bit-for-bit equal —
+    the contract repro.serve.PrototypeStore serves online means under."""
+    rng = np.random.default_rng(5)
+    f = jnp.asarray(rng.normal(size=(13, 8)).astype(np.float32))
+    labs = jnp.asarray(rng.integers(0, 3, 13), jnp.int32)
+    want = ncm.class_means(f, labs, 3)
+    for splits in ([4, 9], [1, 2, 7], [13]):
+        sums = jnp.zeros((3, 8), jnp.float32)
+        counts = jnp.zeros((3,), jnp.float32)
+        lo = 0
+        for hi in splits + [13]:
+            sums, counts = ncm.running_update(sums, counts, f[lo:hi],
+                                              labs[lo:hi])
+            lo = hi
+        np.testing.assert_array_equal(np.asarray(ncm.finalize_means(sums, counts)),
+                                      np.asarray(want))
+
+
+def test_class_means_single_shot_and_imbalanced():
+    """k=1 means are the (normalized) shots themselves; a way with zero
+    support keeps a zero mean (count clamp) instead of NaN."""
+    rng = np.random.default_rng(6)
+    f = jnp.asarray(rng.normal(size=(4, 6)).astype(np.float32))
+    labs = jnp.asarray([0, 1, 2, 2], jnp.int32)          # way 3 empty
+    means = np.asarray(ncm.class_means(f, labs, 4))
+    fn = np.asarray(f / jnp.linalg.norm(f, axis=-1, keepdims=True))
+    np.testing.assert_allclose(means[0], fn[0], rtol=1e-6)
+    np.testing.assert_allclose(means[1], fn[1], rtol=1e-6)
+    np.testing.assert_array_equal(means[3], np.zeros(6, np.float32))
+    counts_two = np.asarray(ncm.class_means(f, labs, 4))
+    np.testing.assert_array_equal(means, counts_two)     # deterministic
+
+
 @pytest.mark.slow
 def test_fsl_pretraining_improves_over_random():
     """Base-class pretraining must transfer to held-out novel classes."""
