@@ -1,0 +1,36 @@
+"""Shared benchmark-output plumbing.
+
+Every bench writes the same payload shape to the same place with the same
+clobber protection: repo-root ``BENCH_pr<N>.json`` for full runs (the
+committed perf trajectory successive PRs diff against), the system temp
+dir for ``--quick``/``--smoke`` runs so they never overwrite the committed
+file.  One implementation here, so the protection and payload schema can
+never drift between benches.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def write_bench_json(results: Dict[str, float], *, benchmark: str,
+                     basename: str, path: Optional[str] = None,
+                     quick: bool = False) -> str:
+    """Serialize a bench ``run()`` dict; returns the path written."""
+    import jax
+
+    if path is None:
+        path = (os.path.join(tempfile.gettempdir(),
+                             basename.replace(".json", ".quick.json"))
+                if quick else os.path.join(_REPO_ROOT, basename))
+    payload = {"benchmark": benchmark, "quick": bool(quick),
+               "backend": jax.default_backend(), "metrics": results}
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True)
+    print(f"{benchmark},bench_json,{path}")
+    return path

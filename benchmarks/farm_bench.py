@@ -1,0 +1,118 @@
+"""Sweep-farm benchmark (ISSUE 4 acceptance): the DSE loop as a farm.
+
+Measures the ``repro.explore.farm`` orchestrator on a small grid:
+
+* ``point_w{W}a{A}_s`` — per-point wall-clock of the cold run (pretrain +
+  both compiles + probe + episodes + latency measurement);
+* ``cold_total_s`` vs ``serial_est_s`` (the sum of per-point wall-clocks ==
+  what a strictly serial pass costs) → ``speedup_vs_serial_x``.  On a
+  single-device host the farm dispatches serially by design, so this
+  reports ~1.0 honestly; on an N-device host it is the thread-pool speedup.
+* ``resumed_total_s`` — the SAME run again over the now-populated
+  content-hash cache → ``resume_speedup_x``.  This is the farm's core
+  economic claim: a killed sweep restarts for the price of reading its
+  cache, and a re-run with one new grid point costs one point.
+
+Prints ``farm,<metric>,<value>`` CSV lines and RETURNS the dict; ``main``
+serializes to ``BENCH_pr4.json`` (full runs) or the system temp dir
+(``--quick``/``--smoke`` — never clobbers the committed trajectory file).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+from typing import Dict
+
+import jax
+
+from repro.explore import DEFAULT_GRID, SweepFarm, publish_frontier
+from repro.serve import ArtifactRegistry
+
+
+def run(quick: bool = False, smoke: bool = False, *, seed: int = 0) -> Dict[str, float]:
+    results: Dict[str, float] = {}
+
+    def emit(metric: str, value) -> None:
+        results[metric] = float(value)
+        print(f"farm,{metric},{value:.4g}"
+              if isinstance(value, float) else f"farm,{metric},{value}")
+
+    if smoke:
+        grid = [(3, 2), (6, 4)]
+        kw = dict(width=4, steps=2, episodes=2, n_base=6, n_novel=5,
+                  img=16, batch=8, bench_batch=2, bench_iters=1)
+    elif quick:
+        grid = list(DEFAULT_GRID)
+        kw = dict(width=4, steps=20, episodes=3, bench_iters=3)
+    else:
+        grid = list(DEFAULT_GRID)
+        kw = dict(width=8, steps=120, episodes=10)
+
+    emit("grid_points", len(grid))
+    emit("devices", len(jax.devices()))
+
+    cache = tempfile.mkdtemp(prefix="farm_bench_")
+    try:
+        farm = SweepFarm(cache, seed=seed, verbose=False, **kw)
+
+        t0 = time.perf_counter()
+        cold = farm.run(grid)
+        cold_total = time.perf_counter() - t0
+        assert cold.computed == len(grid)
+        for (w, a), wall in zip(grid, cold.wall_s):
+            emit(f"point_w{w}a{a}_s", wall)
+        serial_est = sum(cold.wall_s)
+        emit("cold_total_s", cold_total)
+        emit("serial_est_s", serial_est)
+        emit("speedup_vs_serial_x", serial_est / max(cold_total, 1e-9))
+
+        t0 = time.perf_counter()
+        resumed = farm.run(grid)
+        resumed_total = time.perf_counter() - t0
+        assert resumed.hits == len(grid)
+        emit("resumed_total_s", resumed_total)
+        emit("resume_speedup_x", cold_total / max(resumed_total, 1e-9))
+
+        t0 = time.perf_counter()
+        registry = ArtifactRegistry()
+        names = publish_frontier(cold, registry)
+        emit("publish_s", time.perf_counter() - t0)
+        emit("frontier_points", len(names))
+        emit("knee_weight_bytes",
+             registry.get(None).meta["weight_bytes"])
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+    return results
+
+
+def write_json(results: Dict[str, float], path: str = None,
+               quick: bool = False) -> str:
+    """Serialize a :func:`run` dict to the trajectory file (shared by the
+    CLI here and ``benchmarks/run.py``)."""
+    try:
+        from benchmarks.bench_io import write_bench_json
+    except ImportError:                       # run as a bare script
+        from bench_io import write_bench_json
+    return write_bench_json(results, benchmark="farm",
+                            basename="BENCH_pr4.json", path=path, quick=quick)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal 2-point run for the CI smoke step")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: repo-root BENCH_pr4.json for "
+                         "full runs, temp dir for --quick/--smoke)")
+    args = ap.parse_args(argv)
+    results = run(quick=args.quick, smoke=args.smoke)
+    write_json(results, args.json, quick=args.quick or args.smoke)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,9 +5,11 @@ Prints ``name,metric,value`` CSV lines. ``--quick`` trims iteration counts
 
 The compile benchmark additionally serializes to ``BENCH_pr2.json`` at the
 repo root (interpreter vs f32 artifact vs int artifact latency, weight
-bytes per bit-width config) and the serve benchmark to ``BENCH_pr3.json``
-(single-request vs dynamically-batched serving throughput) — the
-machine-readable perf trajectory successive PRs diff against.
+bytes per bit-width config), the serve benchmark to ``BENCH_pr3.json``
+(single-request vs dynamically-batched serving throughput), and the farm
+benchmark to ``BENCH_pr4.json`` (per-point sweep wall-clock, speedup vs
+serial, resume speedup) — the machine-readable perf trajectory successive
+PRs diff against.
 """
 
 from __future__ import annotations
@@ -26,7 +28,7 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table2,table3,fig5,roofline,compile,"
-                         "serve")
+                         "serve,farm")
     ap.add_argument("--bench-json", default=None,
                     help="where the compile benchmark dict is written "
                          "(default: repo-root BENCH_pr2.json for full runs; "
@@ -67,6 +69,10 @@ def main(argv=None) -> None:
         from benchmarks import serve_bench
         serve_bench.write_json(serve_bench.run(quick=args.quick),
                                quick=args.quick)
+    if want("farm"):
+        from benchmarks import farm_bench
+        farm_bench.write_json(farm_bench.run(quick=args.quick),
+                              quick=args.quick)
     if want("roofline"):
         from benchmarks import roofline
         try:

@@ -124,20 +124,12 @@ def write_json(results: Dict[str, float], path: str = None,
     CLI here and ``benchmarks/run.py``).  Default path: repo-root
     ``BENCH_pr3.json`` for full runs; quick/smoke runs go to the system
     temp dir so they never clobber the committed file."""
-    import json
-    import os
-    import tempfile
-
-    if path is None:
-        repo_root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-        path = (os.path.join(tempfile.gettempdir(), "BENCH_pr3.quick.json")
-                if quick else os.path.join(repo_root, "BENCH_pr3.json"))
-    payload = {"benchmark": "serve", "quick": bool(quick),
-               "backend": jax.default_backend(), "metrics": results}
-    with open(path, "w") as f:
-        json.dump(payload, f, indent=2, sort_keys=True)
-    print(f"serve,bench_json,{path}")
-    return path
+    try:
+        from benchmarks.bench_io import write_bench_json
+    except ImportError:                       # run as a bare script
+        from bench_io import write_bench_json
+    return write_bench_json(results, benchmark="serve",
+                            basename="BENCH_pr3.json", path=path, quick=quick)
 
 
 def main(argv=None) -> None:

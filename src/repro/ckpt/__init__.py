@@ -1,1 +1,5 @@
-from repro.ckpt.manager import CheckpointManager, restore_resharded  # noqa: F401
+from repro.ckpt.manager import (  # noqa: F401
+    CheckpointManager,
+    content_key,
+    restore_resharded,
+)

@@ -10,6 +10,15 @@ Design points for 1000+-node deployments:
   sharding rules of whatever mesh the job restarts with — scaling from
   2×16×16 down to 16×16 (pod loss) or up (pod join) is a restore-time detail.
 * **Keep-k GC** + step metadata (mesh shape, config digest) for audit.
+* **Content-addressed entries**: besides the monotone ``step_*`` train
+  checkpoints, :meth:`CheckpointManager.save_named` stores a tree under an
+  arbitrary key — typically :func:`content_key` of the *configuration that
+  produced it* — with the same atomic-publish discipline.  This is the DSE
+  farm's resume substrate (``repro.explore.farm``): a grid point's trained
+  params cache under the hash of (arch, W, A, seed, train-config), so a
+  killed sweep restarts where it left off and a re-run with one new grid
+  point costs one point.  Named entries are never GC'd (they are a cache
+  keyed by identity, not a history keyed by time).
 
 In a multi-host deployment each host writes its addressable shards
 (``.addressable_shards``); in this single-process container that degenerates
@@ -19,13 +28,33 @@ to a single file per checkpoint, but the code path through
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
+import re
 import shutil
-from typing import Any, Callable, Dict, Optional
+import tempfile
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import numpy as np
+
+
+def content_key(config: Any, length: int = 16) -> str:
+    """Deterministic content hash of a JSON-able configuration.
+
+    Canonical JSON (sorted keys, no whitespace) through sha256, truncated to
+    ``length`` hex chars — stable across processes, platforms and Python
+    hash randomization, so it is a valid *cache identity*: two runs that
+    would train the same point produce the same key, and any config change
+    (one more pretrain step, a different seed) produces a different one.
+    """
+    blob = json.dumps(config, sort_keys=True, separators=(",", ":"),
+                      default=str)
+    return hashlib.sha256(blob.encode()).hexdigest()[:length]
+
+
+_NAME_RE = re.compile(r"^[A-Za-z0-9._-]+$")
 
 
 def _flatten(tree: Any):
@@ -44,19 +73,72 @@ class CheckpointManager:
         os.makedirs(directory, exist_ok=True)
 
     # -- write --------------------------------------------------------------
-    def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
+    def _publish(self, tag: str, final: str, tree: Any,
+                 meta: Dict) -> str:
+        """Write arrays+meta to a private ``tmp.<tag>.*`` dir then
+        ``os.replace`` into ``final`` — a crash mid-write can never corrupt
+        a published entry.  The tmp dir is mkdtemp-unique, not
+        deterministic: two concurrent writers of the SAME key (duplicate
+        grid points on a multi-device farm, or two farm processes sharing a
+        cache dir) must never interleave into one staging dir — each
+        publishes a complete entry and the last ``os.replace`` wins."""
         flat, _ = _flatten(tree)
-        tmp = os.path.join(self.dir, f"tmp.{step}")
-        final = os.path.join(self.dir, f"step_{step:010d}")
-        os.makedirs(tmp, exist_ok=True)
+        tmp = tempfile.mkdtemp(prefix=f"tmp.{tag}.", dir=self.dir)
         np.savez(os.path.join(tmp, "arrays.npz"), **flat)
         with open(os.path.join(tmp, "meta.json"), "w") as f:
-            json.dump({"step": step, **(meta or {})}, f)
-        if os.path.exists(final):
-            shutil.rmtree(final)
-        os.replace(tmp, final)          # atomic publish
+            json.dump(meta, f)
+        # atomic publish; bounded retry because a CONCURRENT same-key writer
+        # may re-create ``final`` between our rmtree and replace (ENOTEMPTY)
+        for attempt in range(10):
+            if os.path.exists(final):
+                shutil.rmtree(final, ignore_errors=True)
+            try:
+                os.replace(tmp, final)
+                return final
+            except OSError:
+                if attempt == 9:
+                    raise
+        return final
+
+    def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> str:
+        final = self._publish(str(step),
+                              os.path.join(self.dir, f"step_{step:010d}"),
+                              tree, {"step": step, **(meta or {})})
         self._gc()
         return final
+
+    # -- content-addressed entries (never GC'd) -----------------------------
+    def _named_dir(self, name: str) -> str:
+        if not _NAME_RE.match(name):
+            raise ValueError(
+                f"invalid checkpoint name {name!r}: use [A-Za-z0-9._-] "
+                "(content_key() output is always valid)")
+        return os.path.join(self.dir, f"named_{name}")
+
+    def save_named(self, name: str, tree: Any,
+                   meta: Optional[Dict] = None) -> str:
+        """Atomically store ``tree`` under an arbitrary key — typically
+        :func:`content_key` of the config that produced it (the farm's
+        resume cache).  Overwrites an existing entry of the same name."""
+        return self._publish(f"named_{name}", self._named_dir(name), tree,
+                             {"name": name, **(meta or {})})
+
+    def has_named(self, name: str) -> bool:
+        return os.path.isdir(self._named_dir(name))
+
+    def all_named(self) -> List[str]:
+        return sorted(n[len("named_"):] for n in os.listdir(self.dir)
+                      if n.startswith("named_"))
+
+    def restore_named(self, like: Any, name: str) -> Any:
+        if not self.has_named(name):
+            raise FileNotFoundError(
+                f"no named checkpoint '{name}' under {self.dir}")
+        return self._read(self._named_dir(name), like)
+
+    def named_meta(self, name: str) -> Dict:
+        with open(os.path.join(self._named_dir(name), "meta.json")) as f:
+            return json.load(f)
 
     def _gc(self):
         steps = self.all_steps()
@@ -76,13 +158,8 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
-    def restore(self, like: Any, step: Optional[int] = None) -> Any:
-        """Restore into the structure of ``like`` (host numpy leaves)."""
-        step = self.latest_step() if step is None else step
-        if step is None:
-            raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:010d}", "arrays.npz")
-        data = np.load(path)
+    def _read(self, path: str, like: Any) -> Any:
+        data = np.load(os.path.join(path, "arrays.npz"))
         flat_like, treedef = _flatten(like)
         leaves = []
         for key in flat_like:
@@ -91,6 +168,13 @@ class CheckpointManager:
                                "(tree structure changed?)")
             leaves.append(data[key])
         return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    def restore(self, like: Any, step: Optional[int] = None) -> Any:
+        """Restore into the structure of ``like`` (host numpy leaves)."""
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        return self._read(os.path.join(self.dir, f"step_{step:010d}"), like)
 
     def meta(self, step: Optional[int] = None) -> Dict:
         step = self.latest_step() if step is None else step

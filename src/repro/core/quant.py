@@ -129,6 +129,21 @@ class QuantConfig:
         )
 
     @staticmethod
+    def grid_point(w_bits: int, a_bits: int) -> "QuantConfig":
+        """The sweep's frac-split convention for a (W, A) grid point: signed
+        weights keep one integer bit (the sign), unsigned activations keep
+        two magnitude bits — ``grid_point(6, 4)`` is exactly the paper's
+        6(1.5)/4(2.2) deployment point (== :meth:`paper_w6a4`).  This is the
+        single source of truth the DSE sweep (``repro.explore``) and the
+        farm's publish step (``FSLPipeline.for_point``) both resolve through,
+        so a cached sweep point and its served artifact can never disagree
+        about what grid a (W, A) pair means.
+        """
+        return QuantConfig(
+            weight=FixedPointSpec(w_bits, max(w_bits - 1, 0), signed=True),
+            act=FixedPointSpec(a_bits, max(a_bits - 2, 0), signed=False))
+
+    @staticmethod
     def paper_w16a16() -> "QuantConfig":
         """The conventional (Tensil-era) 16-bit fixed-point baseline."""
         return QuantConfig(

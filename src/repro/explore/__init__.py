@@ -1,12 +1,32 @@
 """Design-space exploration over bit-width configurations (paper Tables
 II/III): compile a grid of (W, A) points through both datapaths, measure
-episode accuracy / storage bytes / throughput, and emit the frontier."""
+episode accuracy / storage bytes / throughput, and emit the frontier.
 
+``sweep`` is the serial in-process loop; ``SweepFarm`` is the parallel,
+resumable orchestrator over the same per-point unit (``run_point``), and
+``publish_frontier`` pushes the Pareto set into a live serve registry.
+"""
+
+from repro.explore.farm import (  # noqa: F401
+    FarmResult,
+    SweepFarm,
+    publish_frontier,
+    select_knee,
+)
 from repro.explore.sweep import (  # noqa: F401
     DEFAULT_GRID,
+    DETERMINISTIC_KEYS,
+    PointResult,
     config_for,
     pareto_frontier,
+    point_seed,
+    probe_batch,
+    run_point,
     sweep,
 )
 
-__all__ = ["sweep", "config_for", "pareto_frontier", "DEFAULT_GRID"]
+__all__ = [
+    "DEFAULT_GRID", "DETERMINISTIC_KEYS", "FarmResult", "PointResult",
+    "SweepFarm", "config_for", "pareto_frontier", "point_seed",
+    "probe_batch", "publish_frontier", "run_point", "select_knee", "sweep",
+]

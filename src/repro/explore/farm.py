@@ -1,0 +1,293 @@
+"""Parallel, resumable DSE sweep farm — sweep → select → deploy as ONE
+automated system.
+
+``repro.explore.sweep`` runs the paper's outer loop strictly serially,
+re-pretrains every point from scratch on every invocation, and its output
+dies in a JSON file.  This module closes the loop the related pipelines
+(PEFSL's FPGA deployment flow, the MLPerf-Tiny codesign flow) treat as one
+system:
+
+* **Concurrent** — grid points dispatch over a thread pool, one worker per
+  JAX device with per-point ``jax.default_device`` pinning (each point is an
+  independent train+compile+measure unit; on a single device the farm falls
+  back to serial dispatch, same results by construction since every point
+  owns its own PRNG stream via :func:`repro.explore.sweep.point_seed`).
+* **Resumable** — each finished point (trained params + served-path probe
+  features + the metrics record) is checkpointed atomically under a
+  *content hash* of its full identity ``(arch, W, A, seed, train-config)``
+  (``ckpt.content_key`` / ``CheckpointManager.save_named``).  A killed farm
+  restarts where it left off; re-running with one new grid point costs one
+  point; changing ANY config field changes the key and retrains — a cache
+  hit is always the point you asked for.
+* **Publishing** — :func:`publish_frontier` compiles the Pareto-optimal
+  points through ``FSLPipeline.deploy`` and registers them in a
+  ``serve.ArtifactRegistry`` with provenance metadata (weight bytes,
+  episode accuracy, latency, cache key), hot-swapping the registry default
+  to the selected knee.  "Sweep → A/B-serve the knee" is one call; the
+  sweep-time probe is regenerable from each record (``probe_batch``), so a
+  published artifact can be audited bit-for-bit against the features it
+  was swept with.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import time
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager, content_key
+from repro.data.synthetic import SyntheticImages
+from repro.explore.sweep import (DEFAULT_GRID, PointResult, pareto_frontier,
+                                 run_point)
+from repro.fsl.pipeline import FSLPipeline
+
+__all__ = ["FarmResult", "SweepFarm", "publish_frontier", "select_knee"]
+
+
+@dataclasses.dataclass
+class FarmResult:
+    """Outcome of one :meth:`SweepFarm.run` — records in grid order plus the
+    cache/provenance bookkeeping the publish step needs."""
+
+    grid: List[Tuple[int, int]]
+    points: List[Dict]              # one sweep record per grid point
+    frontier: List[int]             # Pareto indices into ``points``
+    keys: List[str]                 # content-hash cache key per point
+    cached: List[bool]              # True = served from cache, not computed
+    wall_s: List[float]             # per-point wall-clock (≈0 for cache hits)
+    cache_dir: str
+    config: Dict                    # shared train config (width, steps, ...)
+
+    @property
+    def hits(self) -> int:
+        return sum(self.cached)
+
+    @property
+    def computed(self) -> int:
+        return len(self.cached) - self.hits
+
+    def to_dict(self) -> Dict:
+        """JSON form — a strict superset of the serial ``sweep()`` dict."""
+        return {
+            "model": "resnet9", "backend": jax.default_backend(),
+            "grid": [list(p) for p in self.grid], "points": self.points,
+            "frontier": self.frontier, "keys": self.keys,
+            "cached": self.cached, "wall_s": self.wall_s,
+            "cache_dir": self.cache_dir, "config": self.config,
+        }
+
+    def write(self, path: str) -> None:
+        with open(path, "w") as f:
+            json.dump(self.to_dict(), f, indent=2, sort_keys=True)
+
+
+class SweepFarm:
+    """Concurrent, resumable orchestrator over ``run_point``.
+
+    The constructor pins the full train config; :meth:`key_for` hashes it
+    together with a grid point into the cache identity.  ``workers=None``
+    means one worker per JAX device (serial on a single device); any
+    explicit count is honored — every point's PRNG stream is derived from
+    ``(seed, W, A)`` alone, so results are scheduling-independent.
+    """
+
+    def __init__(self, cache_dir: str, *, width: int = 8, steps: int = 120,
+                 episodes: int = 10, n_base: int = 12, n_novel: int = 6,
+                 img: int = 32, batch: int = 32, bench_batch: int = 8,
+                 bench_iters: int = 10, seed: int = 0,
+                 workers: Optional[int] = None, verbose: bool = True):
+        self.cache_dir = cache_dir
+        self.mgr = CheckpointManager(cache_dir)
+        self.config = {
+            "arch": "resnet9", "width": int(width), "steps": int(steps),
+            "episodes": int(episodes), "n_base": int(n_base),
+            "n_novel": int(n_novel), "img": int(img), "batch": int(batch),
+            "bench_batch": int(bench_batch), "seed": int(seed),
+        }
+        self.bench_iters = int(bench_iters)   # timing budget: not identity
+        self.workers = workers
+        self.verbose = verbose
+
+    # -- cache identity -----------------------------------------------------
+    def key_for(self, w_bits: int, a_bits: int) -> str:
+        """Content hash of (train-config, W, A) — the point's cache key.
+
+        ``bench_iters`` is deliberately excluded: it only changes how long
+        the latency measurement averages, not what the point IS; everything
+        else (seed, steps, width, data sizes) is identity.
+        """
+        return content_key({**self.config, "w_bits": int(w_bits),
+                            "a_bits": int(a_bits)})
+
+    # -- run ----------------------------------------------------------------
+    def run(self, grid: Sequence[Tuple[int, int]] = DEFAULT_GRID
+            ) -> FarmResult:
+        grid = [tuple(p) for p in grid]
+        cfg = self.config
+        data = SyntheticImages(n_base=cfg["n_base"], n_novel=cfg["n_novel"],
+                               seed=cfg["seed"], img=cfg["img"])
+        devices = jax.devices()
+        workers = self.workers if self.workers is not None else len(devices)
+        workers = max(min(workers, len(grid)), 1)
+
+        def one(i: int) -> Tuple[Dict, str, bool, float]:
+            w_bits, a_bits = grid[i]
+            key = self.key_for(w_bits, a_bits)
+            t0 = time.perf_counter()
+            if self.mgr.has_named(key):
+                record = self.mgr.named_meta(key)["record"]
+                if self.verbose:
+                    print(f"farm,w{w_bits}a{a_bits},cache_hit,{key}")
+                return record, key, True, time.perf_counter() - t0
+            dev = devices[i % len(devices)]
+            ctx = (jax.default_device(dev) if len(devices) > 1
+                   else contextlib.nullcontext())
+            with ctx:
+                pr = run_point(
+                    w_bits, a_bits, width=cfg["width"], steps=cfg["steps"],
+                    episodes=cfg["episodes"], batch=cfg["batch"],
+                    bench_batch=cfg["bench_batch"],
+                    bench_iters=self.bench_iters, seed=cfg["seed"],
+                    data=data, verbose=self.verbose)
+            wall = time.perf_counter() - t0
+            # atomic publish AFTER the point fully finished: a kill mid-point
+            # leaves no entry, so resume recomputes it — never a half-result
+            self.mgr.save_named(
+                key, {"params": pr.params, "probe_feats": pr.probe_feats},
+                meta={"record": pr.record, "config": cfg, "wall_s": wall})
+            return pr.record, key, False, wall
+
+        if workers <= 1:
+            outs = [one(i) for i in range(len(grid))]
+        else:
+            with ThreadPoolExecutor(max_workers=workers,
+                                    thread_name_prefix="sweep-farm") as ex:
+                outs = list(ex.map(one, range(len(grid))))
+
+        points = [o[0] for o in outs]
+        result = FarmResult(
+            grid=grid, points=points, frontier=pareto_frontier(points),
+            keys=[o[1] for o in outs], cached=[o[2] for o in outs],
+            wall_s=[o[3] for o in outs], cache_dir=self.cache_dir,
+            config=dict(cfg))
+        if self.verbose:
+            print(f"farm,done,{result.computed} computed,"
+                  f"{result.hits} cache hits,frontier={result.frontier}")
+        return result
+
+    # -- cache access -------------------------------------------------------
+    def restore_point(self, key: str) -> PointResult:
+        return _restore_point(self.cache_dir, key, self.config["width"],
+                              self.config["bench_batch"])
+
+
+def _restore_point(cache_dir: str, key: str, width: int,
+                   bench_batch: int) -> PointResult:
+    """Load a cached point (params + probe features + record) by key."""
+    from repro.models import resnet9
+
+    mgr = CheckpointManager(cache_dir)
+    like = {
+        "params": resnet9.init_params(jax.random.PRNGKey(0), width),
+        "probe_feats": np.zeros((bench_batch, resnet9.feature_dim(width)),
+                                np.float32),
+    }
+    tree = mgr.restore_named(like, key)
+    return PointResult(record=mgr.named_meta(key)["record"],
+                       params=tree["params"],
+                       probe_feats=np.asarray(tree["probe_feats"]))
+
+
+def select_knee(points: Sequence[Dict], frontier: Sequence[int],
+                acc_tol: float = 0.02) -> int:
+    """The frontier point to serve by default: smallest int weight footprint
+    within ``acc_tol`` of the frontier's best accuracy — the paper's knee
+    argument (w6a4 matches w8a8 accuracy at a fraction of the storage)
+    expressed as a rule instead of a human reading Table II."""
+    if not frontier:
+        raise ValueError("empty frontier: nothing to select a knee from")
+    best = max(points[i]["acc_mean"] for i in frontier)
+    good = [i for i in frontier if points[i]["acc_mean"] >= best - acc_tol]
+    return min(good, key=lambda i: (points[i]["weight_bytes_int"],
+                                    -points[i]["acc_mean"]))
+
+
+def publish_frontier(result: FarmResult, registry, *, datapath: str = "int",
+                     set_default: bool = True, acc_tol: float = 0.02
+                     ) -> List[str]:
+    """Compile the Pareto-optimal points and register them for serving.
+
+    For every frontier index: restore the cached params, deploy through
+    ``FSLPipeline.for_point`` (the SAME (W, A) → grid convention the sweep
+    trained at) on ``datapath``, and register ``"w{W}a{A}-{datapath}"`` in
+    ``registry`` with provenance metadata (weight bytes, episode accuracy,
+    latency, cache key, probe digest).  The registry default hot-swaps to
+    the :func:`select_knee` point, so the next anonymous request is served
+    by the knee — "sweep → A/B-serve the knee" as one call.
+
+    Returns the registered artifact names in frontier order.
+    """
+    if not result.points:
+        raise ValueError("cannot publish an empty farm result")
+    knee = select_knee(result.points, result.frontier, acc_tol)
+    names: List[str] = []
+    for i in result.frontier:
+        rec = result.points[i]
+        w_bits, a_bits = rec["w_bits"], rec["a_bits"]
+        pr = _restore_point(result.cache_dir, result.keys[i],
+                            result.config["width"],
+                            result.config["bench_batch"])
+        pipe = FSLPipeline.for_point(w_bits, a_bits,
+                                     width=result.config["width"])
+        feats = pipe.deploy(pr.params, datapath=datapath)
+        name = f"w{w_bits}a{a_bits}-{datapath}"
+        # provenance must describe the datapath actually deployed — an f32
+        # publication must not carry the int artifact's (~4x smaller)
+        # footprint or its latency
+        dp = "int" if datapath == "int" else "f32"
+        registry.register(
+            name, feats,
+            default=(set_default and i == knee),
+            meta={
+                "w_bits": w_bits, "a_bits": a_bits, "datapath": datapath,
+                "weight_bytes": rec[f"weight_bytes_{dp}"],
+                "acc_mean": rec["acc_mean"], "acc_ci95": rec["acc_ci95"],
+                "ms_per_batch": rec[f"{dp}_ms_per_batch"],
+                "point_seed": rec["point_seed"],
+                "probe_digest": rec["probe_digest"],
+                "cache_key": result.keys[i], "knee": i == knee,
+            })
+        names.append(name)
+    return names
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--cache-dir", default="FARM_cache")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny budget: fewer steps/episodes (CI smoke)")
+    ap.add_argument("--out", default="FARM_frontier.json")
+    ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workers", type=int, default=None)
+    args = ap.parse_args(argv)
+    kw = dict(width=args.width, seed=args.seed, workers=args.workers)
+    if args.quick:
+        kw.update(width=min(args.width, 8), steps=20, episodes=3,
+                  bench_iters=3)
+    farm = SweepFarm(args.cache_dir, **kw)
+    result = farm.run()
+    result.write(args.out)
+    print(f"farm,written,{args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -4,10 +4,9 @@ program.
 The paper's contribution is an *environment*: pick a (W, A) fixed-point
 grid, QAT-train the few-shot backbone on it, build the HW graph at the same
 grid, and read off the accuracy/footprint/throughput trade — then repeat
-over the grid to find the knee (their chosen point: w6a4).  :func:`sweep`
-automates exactly that loop over the compiler in this repo:
+over the grid to find the knee (their chosen point: w6a4).  :func:`run_point`
+is exactly ONE iteration of that loop over the compiler in this repo:
 
-for each (W, A) point:
   1. QAT-pretrain the ResNet-9 backbone at that grid (``fsl.pipeline``);
   2. compile BOTH deployment artifacts — ``datapath="f32"`` (grid-emulated)
      and ``datapath="int"`` (integer codes + ``mvau_int``) — and assert
@@ -16,6 +15,19 @@ for each (W, A) point:
      (the deployed-accuracy contract);
   4. measure weight storage bytes (f32 vs int) and per-batch latency.
 
+:func:`sweep` is the serial loop over a grid; ``repro.explore.farm`` is the
+parallel, resumable, registry-publishing orchestrator over the same
+:func:`run_point` — one point = one unit of (cacheable) work either way.
+
+Seeding: each grid point derives its own stream via :func:`point_seed`
+(a content hash of ``(seed, W, A)``), so concurrent farm workers never
+share PRNG streams and a point's result is a pure function of
+``(config, seed)`` — the property the farm's content-hash cache keys rely
+on.  The probe batch a point was validated on is regenerable from the
+record alone (:func:`probe_batch`), which is how the serve-time
+bit-exactness check replays a sweep-time probe against a published
+artifact.
+
 The result is a JSON-serializable dict with one record per point and the
 accuracy-vs-bytes Pareto frontier marked — the machine-readable form of the
 paper's Table II (accuracy per bit-width) and Table III (throughput).
@@ -23,31 +35,65 @@ paper's Table II (accuracy per bit-width) and Table III (throughput).
 
 from __future__ import annotations
 
+import dataclasses
+import hashlib
 import json
+import threading
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import numpy as np
 
-from repro.core.quant import FixedPointSpec, QuantConfig, fake_quant
+from repro.core.quant import QuantConfig, fake_quant
 from repro.data.synthetic import SyntheticImages
 from repro.fsl.pipeline import FSLPipeline, evaluate_episodes, pretrain_backbone
 
-__all__ = ["DEFAULT_GRID", "config_for", "pareto_frontier", "sweep"]
+__all__ = ["DEFAULT_GRID", "DETERMINISTIC_KEYS", "PointResult", "config_for",
+           "pareto_frontier", "point_seed", "probe_batch", "run_point",
+           "sweep"]
 
 # (weight_bits, act_bits) grid — paper Table II's sweep axis, bracketing the
 # chosen w6a4 point from "collapses" (tiny) to "conventional" (wide).
 DEFAULT_GRID: Tuple[Tuple[int, int], ...] = ((3, 2), (4, 4), (6, 4), (8, 8))
 
+# Serializes the latency-measurement window across concurrent farm workers.
+_BENCH_LOCK = threading.Lock()
+
+# Record keys that are a pure function of (config, seed) — no wall-clock.
+# The determinism contract (same seed ⇒ identical records) and the farm's
+# cache-identity tests compare exactly these; latency fields are measured
+# and legitimately vary run to run.
+DETERMINISTIC_KEYS: Tuple[str, ...] = (
+    "w_bits", "a_bits", "weight_spec", "act_spec", "acc_mean", "acc_ci95",
+    "weight_bytes_f32", "weight_bytes_int", "bitexact_int_vs_f32",
+    "final_pretrain_loss", "seed", "point_seed", "probe_digest")
+
 
 def config_for(w_bits: int, a_bits: int) -> QuantConfig:
-    """The paper's frac-split convention for a (W, A) point: signed weights
-    keep one integer bit (sign), unsigned activations keep two magnitude
-    bits — w6a4 maps to exactly the paper's 6(1.5)/4(2.2) deployment point.
+    """The paper's frac-split convention for a (W, A) point — alias of
+    :meth:`QuantConfig.grid_point` (the canonical home, shared with
+    ``FSLPipeline.for_point`` so sweep and publish agree by construction).
     """
-    return QuantConfig(
-        weight=FixedPointSpec(w_bits, max(w_bits - 1, 0), signed=True),
-        act=FixedPointSpec(a_bits, max(a_bits - 2, 0), signed=False))
+    return QuantConfig.grid_point(w_bits, a_bits)
+
+
+def point_seed(seed: int, w_bits: int, a_bits: int) -> int:
+    """Per-point PRNG seed derived from the sweep seed and the grid point.
+
+    A content hash (not ``seed + i``): stable under grid reordering or
+    insertion — adding one new point to a swept grid leaves every other
+    point's stream (and therefore its cache key and cached result) intact —
+    and collision-free across points, so farm workers running concurrently
+    never share a stream.
+    """
+    blob = f"{int(seed)}:{int(w_bits)}:{int(a_bits)}".encode()
+    return int.from_bytes(hashlib.sha256(blob).digest()[:4], "big") % (2**31)
+
+
+def probe_batch(pseed: int, n: int, img: int) -> jax.Array:
+    """The bit-exactness probe batch for a point (regenerable from its
+    record's ``point_seed`` — the serve-time replay hook)."""
+    return jax.random.uniform(jax.random.PRNGKey(pseed + 1), (n, img, img, 3))
 
 
 def pareto_frontier(points: Sequence[Dict]) -> List[int]:
@@ -66,62 +112,112 @@ def pareto_frontier(points: Sequence[Dict]) -> List[int]:
     return frontier
 
 
+@dataclasses.dataclass
+class PointResult:
+    """One grid point's full outcome.
+
+    ``record`` is the JSON row (Tables II/III material); ``params`` the
+    trained backbone tree and ``probe_feats`` the served-path features of
+    the probe batch — what the farm checkpoints so a cached point can be
+    published and bit-exactness-audited without retraining.
+    """
+
+    record: Dict
+    params: Dict
+    probe_feats: np.ndarray
+
+
+def run_point(w_bits: int, a_bits: int, *, width: int = 8, steps: int = 120,
+              episodes: int = 10, batch: int = 32, bench_batch: int = 8,
+              bench_iters: int = 10, seed: int = 0,
+              data: Optional[SyntheticImages] = None,
+              n_base: int = 12, n_novel: int = 6,
+              verbose: bool = False) -> PointResult:
+    """Run ONE (W, A) grid point end to end; see the module docstring.
+
+    ``seed`` is the SWEEP seed; the point derives its own stream via
+    :func:`point_seed` so results are independent of which other points run,
+    in what order, or on which farm worker.  Deterministic record fields
+    (see ``DETERMINISTIC_KEYS``) are a pure function of the arguments.
+    """
+    if data is None:
+        data = SyntheticImages(n_base=n_base, n_novel=n_novel, seed=seed)
+    ps = point_seed(seed, w_bits, a_bits)
+    qcfg = config_for(w_bits, a_bits)
+    pipe = FSLPipeline(width=width, qcfg=qcfg)
+    out = pretrain_backbone(data, pipe, steps=steps, batch=batch, seed=ps)
+    params = out["params"]
+
+    feats_int = pipe.deploy(params, datapath="int")
+    dm_int = feats_int.deployed_model
+    dm_f32 = pipe.deploy(params, datapath="f32").deployed_model
+
+    probe = probe_batch(ps, bench_batch, data.img)
+    probe_q = fake_quant(probe, qcfg.act)
+    bitexact = bool(np.array_equal(np.asarray(dm_f32(probe_q)),
+                                   np.asarray(dm_int(probe_q))))
+    # Served-path probe features: the SAME fused fn (input quant + flip
+    # ensemble, ONE jitted program) the registry serves after
+    # publish_frontier — its digest is the point's serve-time audit anchor.
+    probe_feats = np.asarray(feats_int(probe))
+
+    acc, ci = evaluate_episodes(params, data, pipe, n_episodes=episodes,
+                                seed=ps + 100, feats_fn=feats_int)
+    # Latency is wall-clock: farm workers serialize their measurement
+    # windows so two benches never time each other's dispatch.  (Siblings
+    # may still be TRAINING concurrently on a multi-device host — latency
+    # fields from a parallel farm run carry that shared-host noise; the
+    # committed Table III numbers come from serial runs.)
+    with _BENCH_LOCK:
+        t_f32 = dm_f32.throughput(probe_q, iters=bench_iters)
+        t_int = dm_int.throughput(probe_q, iters=bench_iters)
+    record = {
+        "w_bits": w_bits, "a_bits": a_bits,
+        "weight_spec": qcfg.weight.describe(),
+        "act_spec": qcfg.act.describe(),
+        "acc_mean": acc, "acc_ci95": ci,
+        "weight_bytes_f32": dm_f32.weight_bytes(),
+        "weight_bytes_int": dm_int.weight_bytes(),
+        "f32_ms_per_batch": t_f32["ms_per_call"],
+        "int_ms_per_batch": t_int["ms_per_call"],
+        "int_batches_per_s": t_int["calls_per_s"],
+        "bitexact_int_vs_f32": bitexact,
+        "final_pretrain_loss": float(out["losses"][-1]),
+        "seed": int(seed), "point_seed": int(ps),
+        "probe_digest": hashlib.sha256(probe_feats.tobytes()).hexdigest(),
+    }
+    if verbose:
+        print(f"sweep,w{w_bits}a{a_bits},acc={acc:.3f}±{ci:.3f},"
+              f"bytes={record['weight_bytes_int']},"
+              f"ms={record['int_ms_per_batch']:.2f},"
+              f"bitexact={int(bitexact)}")
+    return PointResult(record=record, params=params, probe_feats=probe_feats)
+
+
 def sweep(grid: Sequence[Tuple[int, int]] = DEFAULT_GRID, *,
           width: int = 8, steps: int = 120, episodes: int = 10,
           n_base: int = 12, n_novel: int = 6, batch: int = 32,
           bench_batch: int = 8, bench_iters: int = 10, seed: int = 0,
           data: Optional[SyntheticImages] = None,
           out_path: Optional[str] = None, verbose: bool = True) -> Dict:
-    """Run the bit-width DSE loop; returns (and optionally writes) the
-    frontier dict.  See the module docstring for what each point measures.
+    """Run the bit-width DSE loop serially in-process; returns (and
+    optionally writes) the frontier dict.  One :func:`run_point` per grid
+    point — ``repro.explore.farm.SweepFarm`` is the concurrent, resumable
+    form of this same loop.
     """
     if data is None:
         data = SyntheticImages(n_base=n_base, n_novel=n_novel, seed=seed)
     points: List[Dict] = []
     for w_bits, a_bits in grid:
-        qcfg = config_for(w_bits, a_bits)
-        pipe = FSLPipeline(width=width, qcfg=qcfg)
-        out = pretrain_backbone(data, pipe, steps=steps, batch=batch,
-                                seed=seed)
-        params = out["params"]
-
-        feats_int = pipe.deploy(params, datapath="int")
-        dm_int = feats_int.deployed_model
-        dm_f32 = pipe.deploy(params, datapath="f32").deployed_model
-
-        probe = jax.random.uniform(jax.random.PRNGKey(seed + 1),
-                                   (bench_batch, data.img, data.img, 3))
-        probe_q = fake_quant(probe, qcfg.act)
-        bitexact = bool(np.array_equal(np.asarray(dm_f32(probe_q)),
-                                       np.asarray(dm_int(probe_q))))
-
-        acc, ci = evaluate_episodes(params, data, pipe, n_episodes=episodes,
-                                    seed=seed + 100, feats_fn=feats_int)
-        t_f32 = dm_f32.throughput(probe_q, iters=bench_iters)
-        t_int = dm_int.throughput(probe_q, iters=bench_iters)
-        point = {
-            "w_bits": w_bits, "a_bits": a_bits,
-            "weight_spec": qcfg.weight.describe(),
-            "act_spec": qcfg.act.describe(),
-            "acc_mean": acc, "acc_ci95": ci,
-            "weight_bytes_f32": dm_f32.weight_bytes(),
-            "weight_bytes_int": dm_int.weight_bytes(),
-            "f32_ms_per_batch": t_f32["ms_per_call"],
-            "int_ms_per_batch": t_int["ms_per_call"],
-            "int_batches_per_s": t_int["calls_per_s"],
-            "bitexact_int_vs_f32": bitexact,
-            "final_pretrain_loss": float(out["losses"][-1]),
-        }
-        points.append(point)
-        if verbose:
-            print(f"sweep,w{w_bits}a{a_bits},acc={acc:.3f}±{ci:.3f},"
-                  f"bytes={point['weight_bytes_int']},"
-                  f"ms={point['int_ms_per_batch']:.2f},"
-                  f"bitexact={int(bitexact)}")
+        pr = run_point(w_bits, a_bits, width=width, steps=steps,
+                       episodes=episodes, batch=batch,
+                       bench_batch=bench_batch, bench_iters=bench_iters,
+                       seed=seed, data=data, verbose=verbose)
+        points.append(pr.record)
 
     result = {
         "model": "resnet9", "width": width, "backend": jax.default_backend(),
-        "pretrain_steps": steps, "episodes": episodes,
+        "pretrain_steps": steps, "episodes": episodes, "seed": int(seed),
         "points": points, "frontier": pareto_frontier(points),
     }
     if out_path:
@@ -140,12 +236,14 @@ def main(argv=None) -> None:
                     help="tiny budget: fewer steps/episodes (CI smoke)")
     ap.add_argument("--out", default="SWEEP_frontier.json")
     ap.add_argument("--width", type=int, default=8)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
     if args.quick:
         sweep(width=min(args.width, 8), steps=20, episodes=3, bench_iters=3,
-              out_path=args.out)
+              seed=args.seed, out_path=args.out)
     else:
-        sweep(width=args.width, steps=240, episodes=20, out_path=args.out)
+        sweep(width=args.width, steps=240, episodes=20, seed=args.seed,
+              out_path=args.out)
 
 
 if __name__ == "__main__":

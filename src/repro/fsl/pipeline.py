@@ -41,6 +41,17 @@ class FSLPipeline:
     _deploy_cache: "OrderedDict" = dataclasses.field(
         default_factory=lambda: OrderedDict(), repr=False)
 
+    @classmethod
+    def for_point(cls, w_bits: int, a_bits: int, *, width: int = 8,
+                  **kwargs) -> "FSLPipeline":
+        """Pipeline at a DSE grid point — the same ``(W, A) → QuantConfig``
+        convention (``QuantConfig.grid_point``) the sweep trains at, so the
+        farm's publish step deploys a cached point on EXACTLY the grid it
+        was swept on.  ``kwargs`` forward to the dataclass (n_way, k_shot,
+        easy_augment, ...)."""
+        return cls(width=width, qcfg=QuantConfig.grid_point(w_bits, a_bits),
+                   **kwargs)
+
     def features(self, params, x: jax.Array) -> jax.Array:
         f = resnet9.forward(params, x, self.qcfg, self.width)
         if self.easy_augment:

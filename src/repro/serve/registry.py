@@ -15,7 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
-from typing import Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, Optional, Tuple
 
 import numpy as np
 
@@ -33,11 +33,18 @@ class ServedArtifact:
     most once per batch shape — ``FSLPipeline.deploy()``'s fused fn or a
     raw ``DeployedModel``.  ``trace_count``/``warmup`` hooks are read off
     the callable when present (the engine's zero-retrace accounting).
+
+    ``meta`` is caller-provided provenance — the farm's ``publish_frontier``
+    records the sweep measurements that justified serving this point
+    (weight bytes, episode accuracy, latency, cache key), so an operator
+    can ask a LIVE registry why each artifact is there without re-opening
+    the sweep JSON.  Purely descriptive: the engine never reads it.
     """
 
     name: str
     feats: Callable
     store: PrototypeStore
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
 
     def trace_count(self) -> Optional[int]:
         if isinstance(self.feats, DeployedModel):
@@ -68,15 +75,24 @@ class ArtifactRegistry:
 
     def register(self, name: str, feats: Callable, *,
                  store: Optional[PrototypeStore] = None,
-                 default: bool = False) -> ServedArtifact:
+                 default: bool = False,
+                 meta: Optional[Dict[str, Any]] = None) -> ServedArtifact:
         """Add (or atomically replace) an artifact.  The first registration
-        becomes the default; ``default=True`` swaps it explicitly."""
-        art = ServedArtifact(name, feats, store or PrototypeStore())
+        becomes the default; ``default=True`` swaps it explicitly.  ``meta``
+        attaches provenance (e.g. the sweep measurements behind a published
+        Pareto point) readable via :meth:`metadata`."""
+        art = ServedArtifact(name, feats, store or PrototypeStore(),
+                             dict(meta or {}))
         with self._lock:
             self._artifacts[name] = art
             if default or self._default is None:
                 self._default = name
         return art
+
+    def metadata(self) -> Dict[str, Dict[str, Any]]:
+        """Per-artifact provenance metadata (copies — safe to mutate)."""
+        with self._lock:
+            return {a.name: dict(a.meta) for a in self._artifacts.values()}
 
     def set_default(self, name: str) -> None:
         with self._lock:

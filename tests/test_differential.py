@@ -1,0 +1,206 @@
+"""Differential fuzzing of the compiler stack (ISSUE 4 satellite): random
+small HW-mappable graphs — conv (im2col+MVAU), matmul, multithreshold and
+GlobalAccPool chains over random ``FixedPointSpec`` grids — must execute
+IDENTICALLY through all three engines:
+
+    interpreter (graph.execute)
+      == compiled f32 artifact (repro.compile, datapath="f32")
+      == compiled int artifact (repro.compile, datapath="int")
+
+bit for bit.  This is the property the hand-written resnet9 tests check at
+one architecture; the generator here explores the space of graph shapes,
+bit-widths, threshold layouts (per-tensor and per-channel) and
+integer-domain frontiers (an unfused matmul forces a mid-graph dequantize)
+that no single fixed model covers.
+
+A seeded, always-on parametrized sweep runs in tier-1; when ``hypothesis``
+is installed, a property-based version (marked slow) drives the same
+generator through minimized counterexample search.
+"""
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.graph import Graph, Node, execute
+from repro.core.quant import FixedPointSpec, fake_quant, thresholds_for
+from repro.core.recipes import BuildRecipe
+
+# Graphs are generated pre-streamlined (already HW-mapped): the recipe is
+# the empty pass list, so compile() only appends the datatype-inference and
+# integer-lowering passes for datapath="int".
+_FUZZ_RECIPE = BuildRecipe(
+    "differential-fuzz", (),
+    description="empty pass list over pre-HW-mapped random graphs")
+
+
+# ---------------------------------------------------------------------------
+# Random-graph generator (shared by the seeded sweep and hypothesis)
+# ---------------------------------------------------------------------------
+def _rand_act_spec(rng) -> FixedPointSpec:
+    bits = int(rng.integers(2, 6))
+    return FixedPointSpec(bits, int(rng.integers(0, bits + 1)), signed=False)
+
+
+def _rand_weight_spec(rng) -> FixedPointSpec:
+    bits = int(rng.integers(2, 7))
+    return FixedPointSpec(bits, int(rng.integers(0, bits)), signed=True)
+
+
+def _rand_thresholds(rng, aspec: FixedPointSpec, cout: int) -> np.ndarray:
+    """Activation-grid thresholds, randomly per-tensor (L,) or per-channel
+    (C, L) through a random positive affine (the BN-folding shape)."""
+    grid = thresholds_for(aspec)                      # (L,) ascending
+    if rng.random() < 0.3:
+        return grid.copy()
+    gamma = np.exp(rng.normal(scale=0.5, size=(cout, 1)))
+    beta = rng.normal(scale=0.3, size=(cout, 1))
+    return ((grid[None, :] - beta) / gamma).astype(np.float32)
+
+
+def random_hw_graph(seed: int):
+    """Build a random HW-mappable graph + an on-grid input batch.
+
+    Chains 1–3 conv blocks (im2col → MVAU, optionally maxpool), sometimes
+    followed by a bare-matmul projection head — an integer-domain *frontier*
+    the lowering must dequantize across — and/or a GlobalAccPool tail.
+    With some probability the whole chain is instead generated *unfused*
+    (matmul → standalone multithreshold): those graphs exercise the
+    interpreter-vs-f32-artifact contract only, because the integer lowering
+    (by design — the ``integer_datapath`` property) refuses graphs where
+    float-emulated quantized compute would survive.
+
+    Returns ``(graph, x, int_ok)``; ``int_ok`` says the int datapath is
+    buildable for this graph.
+    """
+    rng = np.random.default_rng(seed)
+    batch = int(rng.integers(1, 4))
+    img = int(rng.choice([4, 8]))
+    c0 = int(rng.integers(1, 4))
+    in_spec = _rand_act_spec(rng)
+    fused = bool(rng.random() < 0.75)       # else: standalone multithreshold
+
+    nodes, inits, dtypes = [], {}, {"x": in_spec}
+    src, hw, c_in = "x", img, c0
+    for b in range(int(rng.integers(1, 4))):
+        wspec = _rand_weight_spec(rng)
+        aspec = _rand_act_spec(rng)
+        cout = int(rng.integers(1, 5))
+        k = 3
+        w = np.asarray(fake_quant(
+            rng.normal(scale=1.0, size=(k * k * c_in, cout))
+            .astype(np.float32), wspec))
+        inits[f"b{b}_w"] = w
+        inits[f"b{b}_t"] = _rand_thresholds(rng, aspec, cout)
+        dtypes[f"b{b}_w"] = wspec
+        dtypes[f"b{b}_t"] = None
+
+        nodes.append(Node("im2col", [src], [f"b{b}_col"],
+                          {"kernel": k, "stride": 1, "pad": 1}))
+        if fused:
+            nodes.append(Node("mvau", [f"b{b}_col", f"b{b}_w", f"b{b}_t"],
+                              [f"b{b}_act"],
+                              {"out_base": 0, "out_scale": aspec.scale}))
+        else:
+            nodes.append(Node("matmul", [f"b{b}_col", f"b{b}_w"],
+                              [f"b{b}_mm"]))
+            nodes.append(Node("multithreshold", [f"b{b}_mm", f"b{b}_t"],
+                              [f"b{b}_act"],
+                              {"channel_axis": -1, "out_base": 0,
+                               "out_scale": aspec.scale}))
+        src, c_in = f"b{b}_act", cout
+        if hw % 2 == 0 and rng.random() < 0.5:
+            nodes.append(Node("maxpool", [src], [f"b{b}_pool"], {"kernel": 2}))
+            src, hw = f"b{b}_pool", hw // 2
+
+    if fused and rng.random() < 0.3:
+        # bare-matmul projection head: annotated inputs but NOT lowerable —
+        # forces the mid-graph dequantize frontier in the int artifact
+        wspec = _rand_weight_spec(rng)
+        w = np.asarray(fake_quant(
+            rng.normal(size=(c_in, 4)).astype(np.float32), wspec))
+        inits["proj_w"] = w
+        dtypes["proj_w"] = wspec
+        nodes.append(Node("matmul", [src, "proj_w"], ["proj"]))
+        src = "proj"
+
+    if rng.random() < 0.6:
+        nodes.append(Node("global_acc_pool", [src], ["out"],
+                          {"axes": [1, 2], "spatial_size": hw * hw}))
+        src = "out"
+
+    g = Graph(nodes, ["x"], [src], inits, name=f"fuzz_{seed}")
+    g.dtypes.update(dtypes)
+    x = rng.uniform(0.0, max(in_spec.max_value, in_spec.scale),
+                    size=(batch, img, img, c0)).astype(np.float32)
+    return g, np.asarray(fake_quant(x, in_spec)), fused
+
+
+def assert_differential(seed: int) -> None:
+    """interpreter == f32 artifact (== int artifact where buildable),
+    bit for bit."""
+    g, x, int_ok = random_hw_graph(seed)
+    ref = np.asarray(execute(g, {"x": x})[0])
+    dm_f32 = repro.compile(g.copy(), recipe=_FUZZ_RECIPE, datapath="f32")
+    np.testing.assert_array_equal(
+        ref, np.asarray(dm_f32(x)),
+        err_msg=f"seed {seed}: interpreter != f32 artifact")
+    if not int_ok:
+        return
+    dm_int = repro.compile(g.copy(), recipe=_FUZZ_RECIPE, datapath="int")
+    np.testing.assert_array_equal(
+        ref, np.asarray(dm_int(x)),
+        err_msg=f"seed {seed}: interpreter != int artifact")
+    # the int build must actually have lowered the fused MVAUs — otherwise
+    # the comparison is vacuous float-vs-float
+    assert any(n.op == "mvau_int" for n in dm_int.graph.nodes), \
+        f"seed {seed}: int artifact contains no mvau_int node"
+
+
+# ---------------------------------------------------------------------------
+# Seeded sweep — always on (tier-1)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", range(8))
+def test_differential_seeded(seed):
+    assert_differential(seed)
+
+
+def test_generator_covers_the_interesting_shapes():
+    """The fuzz corpus must include fused AND unfused chains, GAP and
+    dense-out tails, and the bare-matmul frontier — otherwise the sweep
+    silently stops covering a lowering path."""
+    kinds = set()
+    frontier = 0
+    for seed in range(32):
+        g, _, int_ok = random_hw_graph(seed)
+        ops = [n.op for n in g.nodes]
+        kinds.add(("mvau" if int_ok else "unfused",
+                   "gap" if "global_acc_pool" in ops else "dense_out"))
+        frontier += int("proj_w" in g.initializers)
+    assert len(kinds) >= 3, f"degenerate corpus: {kinds}"
+    assert frontier >= 1, "no bare-matmul frontier graph in 32 seeds"
+
+
+# ---------------------------------------------------------------------------
+# Property-based form (hypothesis optional, nightly via -m slow)
+# ---------------------------------------------------------------------------
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+    _HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    _HAVE_HYPOTHESIS = False
+
+
+if _HAVE_HYPOTHESIS:
+    @pytest.mark.slow
+    @settings(max_examples=40, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+    def test_differential_property(seed):
+        assert_differential(seed)
+else:                                                 # pragma: no cover
+    @pytest.mark.slow
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_differential_property():
+        pass

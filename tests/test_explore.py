@@ -1,18 +1,29 @@
 """repro.explore.sweep — the bit-width DSE loop (ISSUE 2 acceptance):
 compiles a grid of (W, A) points through both datapaths and emits an
-accuracy/bytes/throughput frontier."""
+accuracy/bytes/throughput frontier.  ISSUE 4 adds: pareto_frontier
+edge-case regression locks, explicit per-point seed threading with a
+determinism contract, and the run_point refactor the farm dispatches."""
 
 import json
 
 import pytest
 
 from repro.core.quant import QuantConfig
-from repro.explore import DEFAULT_GRID, config_for, pareto_frontier, sweep
+from repro.explore import (
+    DEFAULT_GRID,
+    DETERMINISTIC_KEYS,
+    config_for,
+    pareto_frontier,
+    point_seed,
+    run_point,
+    sweep,
+)
 
 REQUIRED_KEYS = {"w_bits", "a_bits", "acc_mean", "acc_ci95",
                  "weight_bytes_f32", "weight_bytes_int",
                  "int_ms_per_batch", "int_batches_per_s",
-                 "bitexact_int_vs_f32"}
+                 "bitexact_int_vs_f32",
+                 "seed", "point_seed", "probe_digest"}
 
 
 def test_config_for_matches_paper_point():
@@ -31,6 +42,94 @@ def test_pareto_frontier_marks_dominated_points():
     f = pareto_frontier(pts)
     assert 0 in f and 1 in f
     assert 2 not in f and 3 not in f
+
+
+# ---------------------------------------------------------------------------
+# pareto_frontier edge cases (ISSUE 4 satellite: lock current behavior)
+# ---------------------------------------------------------------------------
+def test_pareto_frontier_empty_records():
+    assert pareto_frontier([]) == []
+
+
+def test_pareto_frontier_single_point():
+    assert pareto_frontier([{"acc_mean": 0.5, "weight_bytes_int": 10}]) == [0]
+
+
+def test_pareto_frontier_tie_on_bytes_keeps_best_acc_only():
+    """Equal bytes, different accuracy: the higher-acc point strictly
+    dominates (>= on both axes, > on acc) — the lower one is off."""
+    pts = [
+        {"acc_mean": 0.9, "weight_bytes_int": 100},
+        {"acc_mean": 0.8, "weight_bytes_int": 100},
+    ]
+    assert pareto_frontier(pts) == [0]
+
+
+def test_pareto_frontier_tie_on_acc_keeps_fewest_bytes_only():
+    pts = [
+        {"acc_mean": 0.9, "weight_bytes_int": 100},
+        {"acc_mean": 0.9, "weight_bytes_int": 80},
+    ]
+    assert pareto_frontier(pts) == [1]
+
+
+def test_pareto_frontier_duplicate_points_both_survive():
+    """Exactly-equal points dominate each other on neither axis STRICTLY, so
+    both stay on the frontier — duplicates are reported, not deduped.
+    (Locked: publish_frontier relies on frontier indices being the caller's
+    point indices, so silent dedup would desynchronize them.)"""
+    pts = [
+        {"acc_mean": 0.9, "weight_bytes_int": 100},
+        {"acc_mean": 0.9, "weight_bytes_int": 100},
+        {"acc_mean": 0.5, "weight_bytes_int": 200},   # dominated by both
+    ]
+    assert pareto_frontier(pts) == [0, 1]
+
+
+def test_pareto_frontier_dominated_equal_on_one_axis():
+    """Domination requires >= on both axes and > on at least one: a point
+    equal on bytes but worse on acc IS dominated; a point trading one axis
+    for the other is NOT."""
+    pts = [
+        {"acc_mean": 0.9, "weight_bytes_int": 100},
+        {"acc_mean": 0.7, "weight_bytes_int": 100},   # dominated (acc)
+        {"acc_mean": 0.7, "weight_bytes_int": 50},    # trade: on frontier
+    ]
+    assert pareto_frontier(pts) == [0, 2]
+
+
+# ---------------------------------------------------------------------------
+# seed threading (ISSUE 4 satellite: farm workers must not share streams)
+# ---------------------------------------------------------------------------
+def test_point_seed_is_deterministic_and_distinct():
+    assert point_seed(0, 6, 4) == point_seed(0, 6, 4)
+    seeds = {point_seed(0, w, a) for w, a in DEFAULT_GRID}
+    assert len(seeds) == len(DEFAULT_GRID), "grid points share a PRNG stream"
+    assert point_seed(1, 6, 4) != point_seed(0, 6, 4)
+    assert all(0 <= s < 2**31 for s in seeds)
+
+
+def test_point_seed_stable_under_grid_changes():
+    """Content-hash derivation: a point's stream doesn't depend on where it
+    sits in the grid — the property that keeps farm cache keys valid when
+    the grid is extended or reordered."""
+    before = point_seed(7, 6, 4)
+    assert point_seed(7, 6, 4) == before          # no hidden global state
+    assert point_seed(7, 4, 6) != before          # (W, A) is ordered
+
+
+def test_run_point_same_seed_identical_records():
+    """Determinism contract: same (config, seed) ⇒ identical deterministic
+    record fields (timing fields legitimately vary)."""
+    kw = dict(width=4, steps=2, episodes=2, batch=8, bench_batch=2,
+              bench_iters=1, n_base=6, n_novel=5, seed=3)
+    a = run_point(3, 2, **kw).record
+    b = run_point(3, 2, **kw).record
+    assert {k: a[k] for k in DETERMINISTIC_KEYS} == \
+        {k: b[k] for k in DETERMINISTIC_KEYS}
+    # and a different sweep seed gives the point a different stream
+    c = run_point(3, 2, **{**kw, "seed": 4}).record
+    assert c["point_seed"] != a["point_seed"]
 
 
 @pytest.mark.slow

@@ -468,6 +468,87 @@ def test_metrics_percentiles_and_counters():
 
 
 # ---------------------------------------------------------------------------
+# percentile math on tiny/empty windows + stop idempotency + registry meta
+# (ISSUE 4 satellites: previously untested paths, behavior locked here)
+# ---------------------------------------------------------------------------
+def test_percentile_empty_window_is_nan_everywhere():
+    from repro.serve.metrics import ServeMetrics, percentile
+    for p in (0, 50, 95, 99, 100):
+        assert np.isnan(percentile([], p))
+    s = ServeMetrics().snapshot()                    # no traffic at all
+    assert np.isnan(s["p50_ms"]) and np.isnan(s["p99_ms"])
+    assert np.isnan(s["mean_batch"]) and s["throughput_rps"] == 0.0
+
+
+def test_percentile_single_sample_window():
+    """n=1: every percentile is THE sample (nearest rank on one rank)."""
+    from repro.serve.metrics import percentile
+    for p in (0, 50, 95, 99, 100):
+        assert percentile([7.5], p) == 7.5
+
+
+def test_percentile_two_sample_window_nearest_rank():
+    """n=2 locks the nearest-rank rounding: k = round(p/100), and Python's
+    round-half-even sends p50 to the LOWER sample — a deliberate
+    (conservative-for-latency) property a future 'fix' must not silently
+    flip."""
+    from repro.serve.metrics import percentile
+    assert percentile([1.0, 9.0], 50) == 1.0         # round(0.5) == 0
+    assert percentile([1.0, 9.0], 51) == 9.0
+    assert percentile([1.0, 9.0], 95) == 9.0
+    assert percentile([1.0, 9.0], 99) == 9.0
+
+
+def test_percentile_clamps_out_of_range_p():
+    from repro.serve.metrics import percentile
+    vals = [1.0, 2.0, 3.0]
+    assert percentile(vals, -10) == 1.0              # k clamped to 0
+    assert percentile(vals, 250) == 3.0              # k clamped to n-1
+
+
+def test_engine_stop_is_idempotent(served):
+    """stop() on a running, stopped, or never-started engine is safe; a
+    stop→start→stop cycle serves in between; submits after the final stop
+    are rejected (not hung)."""
+    pipe, params = served
+    rng = np.random.default_rng(5)
+    eng = _engine(pipe, params, start=False)
+    eng.stop()                                       # never started: no-op
+    eng.stop()
+    eng.start()
+    eng.submit_register("c", _frames(rng, 2)).result(timeout=60)
+    eng.stop()
+    eng.stop()                                       # second stop: no-op
+    with pytest.raises(ServeOverload, match="stopped"):
+        eng.submit_classify(_frames(rng, 1))
+    eng.start()                                      # restart still works
+    res = eng.submit_classify(_frames(rng, 1)).result(timeout=60)
+    assert res.class_ids == ["c"]
+    eng.stop()
+
+
+def test_engine_stop_drain_false_twice(served):
+    """drain=False on an already-stopped engine must not throw while
+    failing an empty queue."""
+    pipe, params = served
+    eng = _engine(pipe, params)
+    eng.stop(drain=False)
+    eng.stop(drain=False)
+
+
+def test_registry_register_attaches_metadata():
+    reg = ArtifactRegistry()
+    reg.register("a", lambda x: x, meta={"weight_bytes": 123, "knee": True})
+    reg.register("b", lambda x: x)
+    assert reg.get("a").meta["weight_bytes"] == 123
+    assert reg.get("b").meta == {}
+    md = reg.metadata()
+    assert md["a"]["knee"] and md["b"] == {}
+    md["a"]["knee"] = False                          # copies: no write-through
+    assert reg.get("a").meta["knee"]
+
+
+# ---------------------------------------------------------------------------
 # soak (slow): the ISSUE 3 acceptance scenario
 # ---------------------------------------------------------------------------
 @pytest.mark.slow
