@@ -6,10 +6,12 @@ Prints ``name,metric,value`` CSV lines. ``--quick`` trims iteration counts
 The compile benchmark additionally serializes to ``BENCH_pr2.json`` at the
 repo root (interpreter vs f32 artifact vs int artifact latency, weight
 bytes per bit-width config), the serve benchmark to ``BENCH_pr3.json``
-(single-request vs dynamically-batched serving throughput), and the farm
+(single-request vs dynamically-batched serving throughput), the farm
 benchmark to ``BENCH_pr4.json`` (per-point sweep wall-clock, speedup vs
-serial, resume speedup) — the machine-readable perf trajectory successive
-PRs diff against.
+serial, resume speedup), and the cluster benchmark to ``BENCH_pr6.json``
+(cold start vs compile-cache restore, overload tail latency, noisy-neighbor
+isolation) — the machine-readable perf trajectory successive PRs diff
+against.
 """
 
 from __future__ import annotations
@@ -28,7 +30,7 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table2,table3,fig5,roofline,compile,"
-                         "serve,farm")
+                         "serve,cluster,farm")
     ap.add_argument("--bench-json", default=None,
                     help="where the compile benchmark dict is written "
                          "(default: repo-root BENCH_pr2.json for full runs; "
@@ -69,6 +71,10 @@ def main(argv=None) -> None:
         from benchmarks import serve_bench
         serve_bench.write_json(serve_bench.run(quick=args.quick),
                                quick=args.quick)
+    if want("cluster"):
+        from benchmarks import serve_bench
+        serve_bench.write_cluster_json(
+            serve_bench.run_cluster(quick=args.quick), quick=args.quick)
     if want("farm"):
         from benchmarks import farm_bench
         farm_bench.write_json(farm_bench.run(quick=args.quick),

@@ -118,6 +118,283 @@ def run(quick: bool = False, smoke: bool = False, *,
     return results
 
 
+# ---------------------------------------------------------------------------
+# cluster benchmark (ISSUE 6 acceptance): cold start through the persistent
+# compile cache, overload tail latency, noisy-neighbor isolation
+# ---------------------------------------------------------------------------
+def _cluster_child(cache_dir: str, *, width: int, img: int, max_batch: int,
+                   seed: int) -> Dict:
+    """One serving-replica lifetime, run in a SUBPROCESS for an honest cold
+    start: build the registry, warm the cluster through the compile cache at
+    ``cache_dir``, serve a fixed first request, and report timings plus the
+    raw similarity bytes (the parent diffs cold vs warm runs bit-for-bit).
+    """
+    import jax
+
+    from repro.ckpt import CompileCache
+    from repro.core.quant import QuantConfig
+    from repro.fsl.pipeline import FSLPipeline
+    from repro.models import resnet9
+    from repro.serve.cluster import ServeCluster, TenantRegistry
+
+    t_boot = time.perf_counter()
+    qcfg = QuantConfig.paper_w6a4()
+    params = resnet9.init_params(jax.random.PRNGKey(seed), width)
+    pipe = FSLPipeline(width=width, qcfg=qcfg)
+    registry = TenantRegistry()
+    registry.register_backbone("w6a4-int", pipe.deploy(params, datapath="int"),
+                               default=True)
+    deploy_s = time.perf_counter() - t_boot
+
+    cache = CompileCache(cache_dir)
+    rng = np.random.default_rng(seed)
+    shots = {c: rng.random((2, img, img, 3)).astype(np.float32)
+             for c in ("a", "b")}
+    queries = rng.random((3, img, img, 3)).astype(np.float32)
+    with ServeCluster(registry, replicas=1, max_batch=max_batch,
+                      batch_wait_ms=1.0, compile_cache=cache) as cluster:
+        cluster.add_tenant("acme")
+        t0 = time.perf_counter()
+        cluster.warmup(img=img)
+        warmup_s = time.perf_counter() - t0
+        for c, x in shots.items():
+            cluster.submit_register("acme", c, x).result(timeout=60)
+        t0 = time.perf_counter()
+        res = cluster.submit_classify("acme", queries).result(timeout=60)
+        first_request_ms = (time.perf_counter() - t0) * 1e3
+        traces = sum(n or 0 for n in cluster.trace_counts().values())
+        snap = cluster.engines[0].metrics.compile_snapshot()
+    return {
+        "deploy_s": deploy_s,
+        "warmup_s": warmup_s,
+        "first_request_ms": first_request_ms,
+        "traces": traces,
+        "compile_events": snap["compile_events"],
+        "compile_cached": snap["compile_cached"],
+        "cache_hits": cache.hits,
+        "cache_stores": cache.stores,
+        "sims_hex": np.ascontiguousarray(
+            np.asarray(res.sims, np.float32)).tobytes().hex(),
+    }
+
+
+def _spawn_child(cache_dir: str, *, width: int, img: int, max_batch: int,
+                 seed: int) -> Dict:
+    """Run :func:`_cluster_child` in a fresh interpreter — nothing survives
+    in memory between the 'first boot' and the 'restarted replica', so the
+    warm-start numbers are what a real restart would see."""
+    import json
+    import os
+    import subprocess
+    import sys
+
+    here = os.path.abspath(__file__)
+    root = os.path.dirname(os.path.dirname(here))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"), env.get("PYTHONPATH")) if p)
+    cmd = [sys.executable, here, "--cluster-child", "--cache-dir", cache_dir,
+           "--width", str(width), "--img", str(img),
+           "--max-batch", str(max_batch), "--seed", str(seed)]
+    r = subprocess.run(cmd, capture_output=True, text=True, timeout=900,
+                       env=env, cwd=root)
+    if r.returncode != 0:
+        raise RuntimeError(f"cluster child failed:\n{r.stderr[-3000:]}")
+    for line in reversed(r.stdout.splitlines()):
+        if line.startswith("CLUSTER_CHILD "):
+            return json.loads(line[len("CLUSTER_CHILD "):])
+    raise RuntimeError(f"no CLUSTER_CHILD line in child stdout:\n"
+                       f"{r.stdout[-2000:]}")
+
+
+def run_cluster(quick: bool = False, smoke: bool = False, *,
+                width: int = 4, img: int = 16, max_batch: int = 16,
+                seed: int = 0) -> Dict[str, float]:
+    """ISSUE 6 scenarios over :class:`repro.serve.cluster.ServeCluster`.
+
+    * ``cold_/warm_warmup_s``, ``warm_first_request_ms`` — two full replica
+      lifetimes in subprocesses sharing one compile-cache dir: the first
+      compiles and publishes, the second restores.  Acceptance: the
+      restarted replica answers its first request in <= 100 ms (vs the
+      multi-second compile the PR 3 bench measured) with ZERO traces, and
+      its similarities are bit-for-bit the cold replica's.
+    * ``overload_*`` — open-loop burst past queue capacity on a 2-replica
+      cluster: completed tail latency and shed count (rejections are load
+      shedding, not failures).
+    * ``noisy_*``/``victim_*`` — a flooding tenant against a paced victim
+      under per-tenant quotas: the victim's contended p99 must stay within
+      2x its isolated p99, and every noisy rejection must be a quota
+      rejection (``TenantOverQuota``), never shared-queue overload.
+    """
+    import shutil
+    import tempfile
+    import threading
+
+    import jax
+
+    from repro.core.quant import QuantConfig
+    from repro.fsl.pipeline import FSLPipeline
+    from repro.models import resnet9
+    from repro.serve import ServeOverload
+    from repro.serve.cluster import (ServeCluster, TenantOverQuota,
+                                     TenantRegistry)
+
+    results: Dict[str, float] = {}
+
+    def emit(metric: str, value) -> None:
+        results[metric] = float(value)
+        print(f"serve_cluster,{metric},{value:.4g}"
+              if isinstance(value, float)
+              else f"serve_cluster,{metric},{value}")
+
+    if smoke:
+        max_batch = 8
+    emit("width", width)
+    emit("img", img)
+    emit("max_batch", max_batch)
+
+    # -- cold start vs cache restore (two subprocess replica lifetimes) -----
+    cache_dir = tempfile.mkdtemp(prefix="repro-exec-cache-")
+    try:
+        cold = _spawn_child(cache_dir, width=width, img=img,
+                            max_batch=max_batch, seed=seed)
+        warm = _spawn_child(cache_dir, width=width, img=img,
+                            max_batch=max_batch, seed=seed)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    emit("cold_warmup_s", cold["warmup_s"])
+    emit("cold_first_request_ms", cold["first_request_ms"])
+    emit("warm_warmup_s", warm["warmup_s"])
+    emit("warm_first_request_ms", warm["first_request_ms"])
+    emit("cold_start_speedup_x", cold["warmup_s"] / max(warm["warmup_s"],
+                                                        1e-9))
+    emit("warm_traces", warm["traces"])                  # MUST be 0
+    emit("warm_compile_cached_frac",
+         warm["compile_cached"] / max(warm["compile_events"], 1))
+    emit("restore_bitforbit",
+         1.0 if warm["sims_hex"] == cold["sims_hex"] else 0.0)
+
+    # -- shared in-process cluster for the load scenarios -------------------
+    qcfg = QuantConfig.paper_w6a4()
+    params = resnet9.init_params(jax.random.PRNGKey(seed), width)
+    pipe = FSLPipeline(width=width, qcfg=qcfg)
+    registry = TenantRegistry()
+    registry.register_backbone("w6a4-int", pipe.deploy(params, datapath="int"),
+                               default=True)
+    rng = np.random.default_rng(seed)
+    frame = rng.random((1, img, img, 3)).astype(np.float32)
+    # the victim serves a realistic multi-frame burst per request (a camera
+    # tick), so its latency is execution-dominated rather than sitting at
+    # the single-frame dispatch floor; half the batch budget so the burst
+    # still coalesces with in-queue co-tenant singles instead of being
+    # pushed to a batch of its own
+    burst = rng.random((max_batch // 2, img, img, 3)).astype(np.float32)
+    n_open = 64 if smoke else (256 if quick else 512)
+    n_victim = 20 if smoke else (50 if quick else 100)
+
+    # quota 2: a tenant may hold at most two in-flight requests per replica,
+    # so a well-behaved co-tenant's wait is bounded by ~one batch cycle no
+    # matter how hard another tenant floods — the isolation the noisy
+    # scenario asserts (victim p99 within 2x isolated)
+    with ServeCluster(registry, replicas=2, max_batch=max_batch,
+                      max_queue=2 * max_batch, batch_wait_ms=1.0,
+                      tenant_quota=2) as cluster:
+        for t in ("open", "noisy", "victim"):
+            cluster.add_tenant(t)
+        cluster.warmup(img=img)
+        for t in ("open", "noisy", "victim"):
+            cluster.submit_register(
+                t, "cls", rng.random((4, img, img, 3)).astype(np.float32)
+            ).result(timeout=60)
+        # prime the classify path off the clock
+        cluster.submit_classify("open", frame).result(timeout=60)
+
+        # tail latency under open-loop overload: submit without pacing,
+        # quota + queue shed the excess, completed requests keep a tail
+        base = cluster.trace_counts()
+        lat: list = []
+        shed = 0
+        futs = []
+        t0 = time.perf_counter()
+        for _ in range(n_open):
+            try:
+                futs.append((time.perf_counter(),
+                             cluster.submit_classify("open", frame)))
+            except ServeOverload:
+                shed += 1
+        for ts, f in futs:
+            f.result(timeout=60)
+            lat.append((time.perf_counter() - ts) * 1e3)
+        wall = time.perf_counter() - t0
+        lat.sort()
+        emit("overload_offered", n_open)
+        emit("overload_completed", len(lat))
+        emit("overload_shed", shed)
+        emit("overload_completed_rps", len(lat) / wall)
+        emit("overload_p50_ms", _pct(lat, 50))
+        emit("overload_p99_ms", _pct(lat, 99))
+
+        # noisy neighbor: victim paced alone, then against a flooding
+        # co-tenant; quotas must keep the victim's tail flat
+        def paced_victim() -> list:
+            out = []
+            for _ in range(n_victim):
+                t1 = time.perf_counter()
+                cluster.submit_classify("victim", burst).result(timeout=60)
+                out.append((time.perf_counter() - t1) * 1e3)
+                time.sleep(0.002)
+            out.sort()
+            return out
+
+        iso = paced_victim()
+        noisy_rej = {"quota": 0, "other": 0}
+        stop = threading.Event()
+
+        def flood() -> None:
+            floods = []
+            while not stop.is_set():
+                try:
+                    floods.append(cluster.submit_classify("noisy", frame))
+                except TenantOverQuota:
+                    noisy_rej["quota"] += 1
+                    time.sleep(0.001)        # client backoff on rejection —
+                    # a rejection busy-spin would measure GIL contention
+                    # from this thread, not serving-path isolation
+                except ServeOverload:
+                    noisy_rej["other"] += 1
+                if len(floods) >= 64:        # keep the future list bounded
+                    floods[0].result(timeout=60)
+                    del floods[0]
+            for f in floods:
+                f.result(timeout=60)
+
+        flooder = threading.Thread(target=flood)
+        flooder.start()
+        try:
+            contended = paced_victim()
+        finally:
+            stop.set()
+            flooder.join(timeout=120)
+        emit("victim_p99_isolated_ms", _pct(iso, 99))
+        emit("victim_p99_contended_ms", _pct(contended, 99))
+        emit("victim_p99_ratio_x",
+             _pct(contended, 99) / max(_pct(iso, 99), 1e-9))
+        emit("noisy_rejected_quota", noisy_rej["quota"])
+        emit("noisy_rejected_other", noisy_rej["other"])  # MUST be 0
+        snap = cluster.metrics_snapshot()
+        emit("victim_rejected", snap["tenants"]["victim"]["rejected"])
+        emit("retraces_under_load",
+             sum(n or 0 for n in cluster.trace_counts().values())
+             - sum(n or 0 for n in base.values()))
+    return results
+
+
+def _pct(sorted_vals, p: float) -> float:
+    from repro.serve.metrics import percentile
+
+    return percentile(sorted_vals, p)
+
+
 def write_json(results: Dict[str, float], path: str = None,
                quick: bool = False) -> str:
     """Serialize a :func:`run` dict to the trajectory file (shared by the
@@ -132,17 +409,52 @@ def write_json(results: Dict[str, float], path: str = None,
                             basename="BENCH_pr3.json", path=path, quick=quick)
 
 
+def write_cluster_json(results: Dict[str, float], path: str = None,
+                       quick: bool = False) -> str:
+    """Serialize a :func:`run_cluster` dict to ``BENCH_pr6.json`` (full
+    runs) or the temp dir (quick/smoke)."""
+    try:
+        from benchmarks.bench_io import write_bench_json
+    except ImportError:                       # run as a bare script
+        from bench_io import write_bench_json
+    return write_bench_json(results, benchmark="serve_cluster",
+                            basename="BENCH_pr6.json", path=path, quick=quick)
+
+
 def main(argv=None) -> None:
     import argparse
+    import json
 
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal single-artifact run for the CI smoke step")
+    ap.add_argument("--cluster", action="store_true",
+                    help="run the multi-tenant cluster scenarios "
+                         "(BENCH_pr6.json) instead of the engine bench")
     ap.add_argument("--json", default=None,
-                    help="output path (default: repo-root BENCH_pr3.json for "
-                         "full runs, temp dir for --quick/--smoke)")
+                    help="output path (default: repo-root BENCH_pr<N>.json "
+                         "for full runs, temp dir for --quick/--smoke)")
+    # internal: one replica lifetime inside the cold-start subprocess
+    ap.add_argument("--cluster-child", action="store_true",
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--cache-dir", default=None, help=argparse.SUPPRESS)
+    ap.add_argument("--width", type=int, default=4, help=argparse.SUPPRESS)
+    ap.add_argument("--img", type=int, default=16, help=argparse.SUPPRESS)
+    ap.add_argument("--max-batch", type=int, default=16,
+                    help=argparse.SUPPRESS)
+    ap.add_argument("--seed", type=int, default=0, help=argparse.SUPPRESS)
     args = ap.parse_args(argv)
+    if args.cluster_child:
+        out = _cluster_child(args.cache_dir, width=args.width, img=args.img,
+                             max_batch=args.max_batch, seed=args.seed)
+        print("CLUSTER_CHILD " + json.dumps(out))
+        return
+    if args.cluster:
+        results = run_cluster(quick=args.quick, smoke=args.smoke)
+        write_cluster_json(results, args.json,
+                           quick=args.quick or args.smoke)
+        return
     results = run(quick=args.quick, smoke=args.smoke)
     write_json(results, args.json, quick=args.quick or args.smoke)
 

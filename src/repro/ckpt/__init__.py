@@ -1,3 +1,7 @@
+from repro.ckpt.compile_cache import (  # noqa: F401
+    CompileCache,
+    graph_fingerprint,
+)
 from repro.ckpt.manager import (  # noqa: F401
     CheckpointManager,
     content_key,

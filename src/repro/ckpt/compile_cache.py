@@ -1,0 +1,203 @@
+"""Persistent AOT compile cache — near-zero cold start for serving replicas.
+
+``DeployedModel.warmup`` pre-compiles one XLA executable per padded batch
+bucket; on the serving path that compile IS the cold start (8.3 s measured
+in BENCH_pr3 for the two-artifact bucket set).  The executables themselves
+are deterministic functions of (lowered graph, datapath, input shape/dtype,
+backend/device kind, jax version) — exactly the shape of thing the farm's
+content-hash scheme (:func:`repro.ckpt.manager.content_key`) was built to
+key.  So: serialize each freshly compiled executable
+(``jax.experimental.serialize_executable``) and publish it under its
+content key via :meth:`CheckpointManager.save_named` (atomic, GC-proof,
+concurrent-writer-safe).  A restarted replica then *loads* its bucket
+executables instead of retracing + recompiling, and serves its first
+request in milliseconds — with **bit-for-bit** identical outputs, because a
+deserialized executable is the same compiled binary, not a re-derivation.
+
+Cache identity notes:
+
+* :func:`graph_fingerprint` digests the HW graph *structurally* — ops,
+  wiring, attrs, and raw initializer bytes — so any change to weights,
+  thresholds, or lowering output changes the key (same discipline as the
+  farm's config hashing, applied to the artifact instead of the config).
+* The key also folds in backend + device kind + jax/jaxlib versions: a
+  serialized executable is a device-specific binary, and loading a stale
+  one after an upgrade must be a clean *miss*, never a wrong hit.  Any
+  entry that fails to deserialize is treated as a miss and dropped.
+"""
+
+from __future__ import annotations
+
+import pickle
+import shutil
+import time
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.ckpt.manager import CheckpointManager, content_key
+
+__all__ = ["CompileCache", "graph_fingerprint"]
+
+
+def _hash_update_array(h, arr: np.ndarray) -> None:
+    arr = np.ascontiguousarray(arr)
+    h.update(str(arr.dtype).encode())
+    h.update(repr(arr.shape).encode())
+    h.update(arr.tobytes())
+
+
+def graph_fingerprint(graph) -> str:
+    """Content digest of a :class:`repro.core.graph.Graph`.
+
+    Covers structure (inputs/outputs, node ops + wiring + attrs) AND the
+    raw initializer bytes (weight codes, threshold tables) — two graphs
+    fingerprint equal iff they lower to the same program over the same
+    constants.  The graph *name* is deliberately excluded: identity is what
+    the artifact computes, not what it was called.
+    """
+    import hashlib
+
+    h = hashlib.sha256()
+    h.update(repr(tuple(graph.inputs)).encode())
+    h.update(repr(tuple(graph.outputs)).encode())
+    for node in graph.nodes:
+        h.update(node.op.encode())
+        h.update(repr(tuple(node.inputs)).encode())
+        h.update(repr(tuple(node.outputs)).encode())
+        for key in sorted(node.attrs):
+            val = node.attrs[key]
+            h.update(key.encode())
+            if isinstance(val, np.ndarray):
+                _hash_update_array(h, val)
+            else:
+                h.update(repr(val).encode())
+    for name in sorted(graph.initializers):
+        h.update(name.encode())
+        _hash_update_array(h, np.asarray(graph.initializers[name]))
+    return h.hexdigest()[:16]
+
+
+def _env_fingerprint() -> Dict[str, str]:
+    import jax
+
+    try:
+        import jaxlib.version
+        jaxlib_ver = jaxlib.version.__version__
+    except Exception:                                  # noqa: BLE001
+        jaxlib_ver = "unknown"
+    return {
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_ver,
+    }
+
+
+class CompileCache:
+    """Persistent store of serialized XLA executables, content-hash keyed.
+
+    Storage rides :meth:`CheckpointManager.save_named` — one named entry
+    per executable, the pickled ``(payload, in_tree, out_tree)`` triple
+    from ``jax.experimental.serialize_executable.serialize`` packed as a
+    uint8 array — so entries publish atomically, survive concurrent
+    same-key writers (duplicate replicas warming in parallel), and are
+    never garbage-collected.
+
+    Typical use (see ``DeployedModel.warmup``)::
+
+        cache = CompileCache("/var/cache/repro-exec")
+        key = cache.key(kind="deployed-model", graph=dm.fingerprint(),
+                        shape=(16, 32, 32, 3), dtype="float32")
+        exe, hit, seconds = cache.get_or_compile(
+            key, lambda: jitted.lower(x).compile())
+    """
+
+    def __init__(self, directory: str):
+        self.mgr = CheckpointManager(directory, keep=0)
+        self.hits = 0
+        self.misses = 0
+        self.stores = 0
+        self.load_errors = 0
+
+    # -- keying -------------------------------------------------------------
+    def key(self, **parts: Any) -> str:
+        """Content key over caller-supplied identity parts + the automatic
+        environment fingerprint (backend, device kind, jax/jaxlib versions
+        — a serialized executable must never load across any of those)."""
+        blob = dict(parts)
+        blob["__env__"] = _env_fingerprint()
+        return content_key(blob)
+
+    # -- store / load -------------------------------------------------------
+    def store(self, key: str, compiled, meta: Optional[Dict] = None) -> str:
+        """Serialize a ``jax.stages.Compiled`` and publish it under ``key``."""
+        from jax.experimental.serialize_executable import serialize
+
+        payload, in_tree, out_tree = serialize(compiled)
+        blob = pickle.dumps((payload, in_tree, out_tree))
+        arr = np.frombuffer(blob, dtype=np.uint8)
+        path = self.mgr.save_named(key, {"exe": arr},
+                                   meta={**_env_fingerprint(), **(meta or {})})
+        self.stores += 1
+        return path
+
+    def load(self, key: str):
+        """Deserialize the executable under ``key``; ``None`` on a miss.
+
+        A present-but-unloadable entry (stale jaxlib, foreign device,
+        truncated write survivor) is evicted and counted as a miss: the
+        cache may only ever make cold start faster, never wronger.
+        """
+        if not self.mgr.has_named(key):
+            self.misses += 1
+            return None
+        try:
+            tree = self.mgr.restore_named(
+                {"exe": np.zeros((0,), np.uint8)}, key)
+            payload, in_tree, out_tree = pickle.loads(tree["exe"].tobytes())
+            from jax.experimental.serialize_executable import (
+                deserialize_and_load,
+            )
+
+            exe = deserialize_and_load(payload, in_tree, out_tree)
+        except Exception:                              # noqa: BLE001
+            self.load_errors += 1
+            self.misses += 1
+            self.evict(key)
+            return None
+        self.hits += 1
+        return exe
+
+    def get_or_compile(self, key: str, compile_fn: Callable[[], Any],
+                       meta: Optional[Dict] = None
+                       ) -> Tuple[Any, bool, float]:
+        """Load ``key`` or run ``compile_fn`` and publish its result.
+
+        Returns ``(executable, cache_hit, seconds)`` where ``seconds`` is
+        the wall-clock of whichever path ran — the per-bucket cold-start
+        cost the serve metrics report.
+        """
+        t0 = time.perf_counter()
+        exe = self.load(key)
+        if exe is not None:
+            return exe, True, time.perf_counter() - t0
+        exe = compile_fn()
+        self.store(key, exe, meta=meta)
+        return exe, False, time.perf_counter() - t0
+
+    # -- bookkeeping --------------------------------------------------------
+    def has(self, key: str) -> bool:
+        return self.mgr.has_named(key)
+
+    def keys(self) -> Tuple[str, ...]:
+        return tuple(self.mgr.all_named())
+
+    def evict(self, key: str) -> None:
+        if self.mgr.has_named(key):
+            shutil.rmtree(self.mgr._named_dir(key), ignore_errors=True)
+
+    def stats(self) -> Dict[str, int]:
+        return {"hits": self.hits, "misses": self.misses,
+                "stores": self.stores, "load_errors": self.load_errors,
+                "entries": len(self.keys())}

@@ -136,6 +136,15 @@ class DeployedModel:
     _jitted: Optional[Callable] = None
     _buckets: Optional[Tuple[int, ...]] = None
     _trace_count: int = 0
+    # AOT executable cache: (input shape, dtype name) -> jax.stages.Compiled.
+    # Populated by warmup() (freshly lowered or restored from a persistent
+    # CompileCache); __call__/batched dispatch here first so a cache-restored
+    # replica never traces at all.
+    _exec: Dict[Tuple[Tuple[int, ...], str], Any] = \
+        dataclasses.field(default_factory=dict)
+    # per-bucket cold-start log: [{"bucket", "seconds", "cached", "key"}]
+    compile_log: list = dataclasses.field(default_factory=list)
+    _fingerprint: Optional[str] = None
 
     def __post_init__(self):
         base = self.apply
@@ -161,13 +170,42 @@ class DeployedModel:
     def buckets(self) -> Optional[Tuple[int, ...]]:
         return self._buckets
 
+    def fingerprint(self) -> str:
+        """Content digest of (graph structure + initializer bytes, datapath)
+        — the artifact half of a :class:`repro.ckpt.CompileCache` key."""
+        if self._fingerprint is None:
+            from repro.ckpt.compile_cache import graph_fingerprint
+
+            self._fingerprint = f"{graph_fingerprint(self.graph)}-{self.datapath}"
+        return self._fingerprint
+
+    def _exec_key(self, shape: Tuple[int, ...], dtype) -> Tuple[Tuple[int, ...], str]:
+        return (tuple(int(s) for s in shape), np.dtype(dtype).name)
+
     def warmup(self, buckets: Sequence[int],
-               example: Union[jax.Array, np.ndarray]) -> Tuple[int, ...]:
+               example: Union[jax.Array, np.ndarray], *,
+               cache: Optional[Any] = None,
+               metrics: Optional[Any] = None,
+               label: Optional[str] = None) -> Tuple[int, ...]:
         """Pre-compile one executable per padded batch bucket.
 
         ``example`` is a BATCHED input of any batch size (same rank as what
         ``__call__`` takes) — its trailing dims/dtype define the per-sample
         shape.  Returns the sorted bucket tuple now backing :meth:`batched`.
+
+        Each bucket lowers AOT (``jit(...).lower(x).compile()``) into a
+        per-shape executable table that ``__call__``/``batched`` dispatch
+        through.  With a :class:`repro.ckpt.CompileCache`, executables are
+        restored from disk instead of recompiled (zero traces — a restarted
+        replica's cold start collapses from seconds to milliseconds), and
+        fresh compiles are published back for the next restart.  A bucket
+        already warmed in-process is skipped outright — re-warming a shared
+        artifact (a second engine replica over the same registry) is free.
+
+        Per-bucket compile wall-clock lands in :attr:`compile_log` and, when
+        a ``metrics`` (:class:`repro.serve.ServeMetrics`) is given, in its
+        compile counters — cold-start cost is observable with or without
+        the cache.
         """
         if len(self.input_names) != 1:
             raise ValueError("warmup() supports single-input graphs; call "
@@ -177,9 +215,31 @@ class DeployedModel:
             raise ValueError("example must be batched (leading batch axis)")
         sample = ex[0]
         bs = normalize_buckets(buckets)
+        name = label or self.graph.name
         for b in bs:
-            x = jnp.zeros((b,) + sample.shape, sample.dtype)
-            jax.block_until_ready(self._jitted(x))
+            shape = (b,) + sample.shape
+            ekey = self._exec_key(shape, sample.dtype)
+            if ekey in self._exec:
+                continue
+            x = jnp.zeros(shape, sample.dtype)
+            if cache is not None:
+                ckey = cache.key(kind="deployed-model",
+                                 graph=self.fingerprint(),
+                                 shape=list(shape),
+                                 dtype=np.dtype(sample.dtype).name)
+                exe, hit, dt = cache.get_or_compile(
+                    ckey, lambda x=x: self._jitted.lower(x).compile(),
+                    meta={"artifact": name, "bucket": int(b)})
+            else:
+                ckey, hit = None, False
+                t0 = time.perf_counter()
+                exe = self._jitted.lower(x).compile()
+                dt = time.perf_counter() - t0
+            self._exec[ekey] = exe
+            self.compile_log.append({"bucket": int(b), "seconds": dt,
+                                     "cached": hit, "key": ckey})
+            if metrics is not None:
+                metrics.record_compile(name, int(b), dt, cached=hit)
         self._buckets = bs
         return bs
 
@@ -197,9 +257,16 @@ class DeployedModel:
         if b != n:
             pad = [(0, b - n)] + [(0, 0)] * (x.ndim - 1)
             x = jnp.pad(x, pad)
-        outs = self._jitted(x)
+        outs = self._dispatch(x)
         outs = tuple(o[:n] for o in outs)
         return outs[0] if len(self.output_names) == 1 else outs
+
+    def _dispatch(self, x):
+        """Route through the AOT executable for this exact shape when warmup
+        built one (never traces — the cache-restored cold-start path), else
+        fall back to the jit cache."""
+        exe = self._exec.get(self._exec_key(jnp.shape(x), x.dtype))
+        return exe(x) if exe is not None else self._jitted(x)
 
     def __call__(self, *inputs, **feeds):
         if feeds:
@@ -212,7 +279,11 @@ class DeployedModel:
                 raise TypeError("pass inputs positionally or by name, not both")
         else:
             args = inputs
-        outs = self._jitted(*args)
+        if (len(args) == 1 and self._exec and hasattr(args[0], "shape")
+                and not isinstance(args[0], jax.core.Tracer)):
+            outs = self._dispatch(jnp.asarray(args[0]))
+        else:
+            outs = self._jitted(*args)
         return outs[0] if len(self.output_names) == 1 else outs
 
     def op_counts(self) -> Dict[str, int]:
@@ -238,10 +309,12 @@ class DeployedModel:
         are warmed or the batch exceeds them) — so a reported number is
         attributable to ONE executable in the bucket cache."""
         n = int(jnp.shape(inputs[0])[0]) if inputs and jnp.ndim(inputs[0]) else 1
-        jax.block_until_ready(self._jitted(*inputs))     # warm-up / compile
+        run = (self._dispatch if len(inputs) == 1 and self._exec
+               else self._jitted)
+        jax.block_until_ready(run(*inputs))              # warm-up / compile
         t0 = time.perf_counter()
         for _ in range(max(iters, 1)):
-            out = self._jitted(*inputs)
+            out = run(*inputs)
         jax.block_until_ready(out)
         dt = (time.perf_counter() - t0) / max(iters, 1)
         # a batch beyond the warmed buckets still measures fine (jit takes

@@ -17,6 +17,8 @@ from repro.dist.compression import (  # noqa: F401
     init_residuals,
 )
 from repro.dist.sharding import (  # noqa: F401
+    prototype_spec,
+    serve_mesh,
     set_fsdp_axes,
     set_moe_expert_axis,
     tree_batch_shardings,

@@ -33,6 +33,8 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = [
+    "prototype_spec",
+    "serve_mesh",
     "set_fsdp_axes",
     "set_moe_expert_axis",
     "tree_param_shardings",
@@ -142,3 +144,31 @@ def tree_cache_shardings(cache: Any, mesh: Mesh) -> Any:
     """Decode-cache shardings: batch dim (after the layer axis) over data."""
     return jax.tree.map(
         lambda c: NamedSharding(mesh, _cache_spec(_shape_of(c), mesh)), cache)
+
+
+def serve_mesh(devices: Optional[Sequence[Any]] = None,
+               axis: str = "model") -> Optional[Mesh]:
+    """1-D mesh over the local devices for the serving-side NCM head.
+
+    Returns ``None`` on a single device — the cluster layer's signal to
+    take the serial fallback path instead of spinning up ``shard_map``
+    machinery that would only add dispatch overhead.  (Same degenerate-to-
+    simple philosophy as the rest of this module: the mesh never changes
+    numerics, only layouts.)
+    """
+    import numpy as np
+
+    devs = list(devices) if devices is not None else list(jax.devices())
+    if len(devs) <= 1:
+        return None
+    return Mesh(np.array(devs), (axis,))
+
+
+def prototype_spec(n_rows: int, mesh: Mesh, axis: str = "model") -> P:
+    """PartitionSpec for a (C, D) prototype matrix: class rows shard over
+    ``axis`` when the row count divides the axis size, else replicate —
+    the same divisibility-or-replicate rule as :func:`tree_param_shardings`
+    (callers pad C up to a multiple to guarantee the sharded case)."""
+    if axis in mesh.shape and n_rows > 0 and n_rows % mesh.shape[axis] == 0:
+        return P(axis, None)
+    return P()

@@ -23,11 +23,16 @@ serving demo; THIS package is the paper's few-shot runtime.
 """
 
 from repro.serve.bucketing import bucket_for, pad_to_bucket, pow2_buckets
-from repro.serve.engine import ClassifyResult, ServeEngine, ServeOverload
+from repro.serve.engine import (
+    ClassifyResult,
+    ServeEngine,
+    ServeOverload,
+    TenantOverQuota,
+)
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ArtifactRegistry, ServedArtifact
 from repro.serve.store import PrototypeStore
 
 __all__ = ["ArtifactRegistry", "ClassifyResult", "PrototypeStore",
            "ServeEngine", "ServeMetrics", "ServeOverload", "ServedArtifact",
-           "bucket_for", "pad_to_bucket", "pow2_buckets"]
+           "TenantOverQuota", "bucket_for", "pad_to_bucket", "pow2_buckets"]

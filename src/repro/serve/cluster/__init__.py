@@ -1,0 +1,39 @@
+"""repro.serve.cluster — multi-tenant sharded serving with near-zero cold
+start (DESIGN.md §10).
+
+Three layers over the PR 3 serving runtime::
+
+    from repro.ckpt import CompileCache
+    from repro.serve.cluster import (ServeCluster, TenantRegistry,
+                                     sharded_tenant_registry)
+
+    reg = sharded_tenant_registry()          # NCM rows shard across devices
+    reg.register_backbone("w6a4-int", pipe.deploy(params, datapath="int"),
+                          default=True)
+    cluster = ServeCluster(reg, replicas=2, tenant_quota=0.25,
+                           compile_cache=CompileCache("/var/cache/repro"))
+    cluster.add_tenant("acme")
+    cluster.warmup(img=32)          # restore AOT executables, not recompile
+    cluster.submit_register("acme", "pelican", shots).result()
+    cluster.submit_classify("acme", frame).result()
+
+* **Tenancy** (`tenancy.py`): per-tenant namespaces + private prototype
+  stores over shared compiled backbones; per-tenant admission quotas
+  surface as :class:`~repro.serve.engine.TenantOverQuota`.
+* **Sharding** (`sharded.py`): ``shard_map`` NCM head splitting prototype
+  rows across devices (`repro.dist` sharding trees + act-sharding
+  constraints), bit-for-bit with the serial head, serial fallback on one
+  device.
+* **Cold start** (`cluster.py` + `repro/ckpt/compile_cache.py`): replica
+  warmup restores serialized per-bucket executables keyed by content hash
+  of (graph, datapath, bucket shape, device kind) — a restarted replica
+  serves its first request in milliseconds.
+"""
+
+from repro.serve.cluster.cluster import ServeCluster, sharded_tenant_registry
+from repro.serve.cluster.sharded import ShardedNCMHead, ShardedStore
+from repro.serve.cluster.tenancy import TenantRegistry
+from repro.serve.engine import TenantOverQuota
+
+__all__ = ["ServeCluster", "ShardedNCMHead", "ShardedStore",
+           "TenantOverQuota", "TenantRegistry", "sharded_tenant_registry"]

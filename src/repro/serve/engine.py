@@ -43,11 +43,20 @@ from repro.serve.bucketing import pad_to_bucket
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ArtifactRegistry
 
-__all__ = ["ClassifyResult", "ServeEngine", "ServeOverload"]
+__all__ = ["ClassifyResult", "ServeEngine", "ServeOverload",
+           "TenantOverQuota"]
 
 
 class ServeOverload(RuntimeError):
     """Admission queue full — shed load or retry with backoff."""
+
+
+class TenantOverQuota(ServeOverload):
+    """THIS tenant's queue share is exhausted — other tenants are still
+    admitted.  A distinct type (not bare :class:`ServeOverload`) so a
+    client can tell "I am being throttled" from "the engine is drowning",
+    and the isolation benchmark can assert a noisy tenant's rejections are
+    all quota rejections while the victim sails through."""
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +76,7 @@ class _Request:
     artifact: Optional[str]
     future: Future
     t_submit: float
+    tenant: Optional[Hashable] = None
 
     @property
     def n(self) -> int:
@@ -81,6 +91,7 @@ class ServeEngine:
                  batch_wait_ms: float = 2.0,
                  buckets: Optional[Sequence[int]] = None,
                  metrics_window: int = 10_000,
+                 tenant_quota: Optional[float] = None,
                  start: bool = True):
         self.registry = registry
         self.max_batch = int(max_batch)
@@ -92,11 +103,33 @@ class ServeEngine:
         self.batch_wait_s = batch_wait_ms / 1e3
         self.metrics = ServeMetrics(window=metrics_window)
         self._queue: "queue.Queue[_Request]" = queue.Queue(maxsize=max_queue)
+        # Per-tenant admission quota: the max share of the queue one tenant
+        # may occupy.  A float in (0, 1] is a fraction of max_queue, an int
+        # >= 1 an absolute request count.  Tenanted submits beyond the share
+        # raise TenantOverQuota while other tenants keep getting admitted —
+        # one flooding tenant cannot starve the rest.  None (default) or
+        # untenanted requests bypass quota accounting entirely.
+        self.tenant_quota = self._normalize_quota(tenant_quota, max_queue)
+        self._tenant_lock = threading.Lock()
+        self._tenant_queued: Dict[Hashable, int] = {}
         self._pending: Optional[_Request] = None     # coalescer carry slot
         self._stop = threading.Event()
         self._worker: Optional[threading.Thread] = None
         if start:
             self.start()
+
+    @staticmethod
+    def _normalize_quota(quota, max_queue: int) -> Optional[int]:
+        if quota is None:
+            return None
+        if isinstance(quota, float) and 0 < quota <= 1:
+            n = int(max_queue * quota)          # fraction of the shared queue
+        elif isinstance(quota, int) and quota >= 1:
+            n = quota                           # absolute request count
+        else:
+            raise ValueError(f"tenant_quota must be a float fraction in "
+                             f"(0, 1] or an int >= 1, got {quota!r}")
+        return max(n, 1)
 
     # -- lifecycle ----------------------------------------------------------
     def start(self) -> None:
@@ -124,8 +157,8 @@ class ServeEngine:
     def __exit__(self, *exc) -> None:
         self.stop(drain=not any(exc))
 
-    def warmup(self, img: int = 32, buckets: Optional[Sequence[int]] = None
-               ) -> Dict[str, Optional[int]]:
+    def warmup(self, img: int = 32, buckets: Optional[Sequence[int]] = None,
+               cache: Optional[Any] = None) -> Dict[str, Optional[int]]:
         """Compile every registered artifact at every bucket shape, then
         reset the throughput clock.  Returns the post-warmup trace counts —
         the baseline a zero-retrace assertion diffs against.
@@ -133,7 +166,12 @@ class ServeEngine:
         A ``buckets`` override REPLACES the engine's bucket set (padding
         must only ever target warmed shapes — warming a subset while
         padding to the old set would quietly reintroduce mid-flight
-        retraces), so it still has to cover ``max_batch``."""
+        retraces), so it still has to cover ``max_batch``.
+
+        ``cache`` (a :class:`repro.ckpt.CompileCache`) restores previously
+        serialized bucket executables instead of recompiling them — the
+        near-zero cold-start path for a restarted replica — and per-bucket
+        compile/restore times land in ``self.metrics`` either way."""
         bs = self.buckets
         if buckets is not None:
             bs = normalize_buckets(buckets)
@@ -141,7 +179,8 @@ class ServeEngine:
                 raise ValueError(f"largest warmup bucket {bs[-1]} < "
                                  f"max_batch {self.max_batch}")
         for name in self.registry.names():
-            self.registry.get(name).warmup(bs, img=img)
+            self.registry.get(name).warmup(bs, img=img, cache=cache,
+                                           metrics=self.metrics)
         # publish only AFTER compiling: concurrent traffic keeps padding to
         # the old (fully warmed) set until every new shape has an executable
         self.buckets = bs
@@ -154,18 +193,21 @@ class ServeEngine:
     # -- admission ----------------------------------------------------------
     def submit_register(self, class_id: Hashable, x,
                         artifact: Optional[str] = None,
-                        timeout: Optional[float] = None) -> Future:
+                        timeout: Optional[float] = None,
+                        tenant: Optional[Hashable] = None) -> Future:
         """Queue support images (k, H, W, C) for online registration of
         ``class_id``.  Future resolves to the class's new shot count."""
-        return self._submit("register", x, class_id, artifact, timeout)
+        return self._submit("register", x, class_id, artifact, timeout, tenant)
 
     def submit_classify(self, x, artifact: Optional[str] = None,
-                        timeout: Optional[float] = None) -> Future:
+                        timeout: Optional[float] = None,
+                        tenant: Optional[Hashable] = None) -> Future:
         """Queue query images (n, H, W, C).  Future resolves to a
         :class:`ClassifyResult`."""
-        return self._submit("classify", x, None, artifact, timeout)
+        return self._submit("classify", x, None, artifact, timeout, tenant)
 
-    def _submit(self, kind, x, class_id, artifact, timeout) -> Future:
+    def _submit(self, kind, x, class_id, artifact, timeout,
+                tenant=None) -> Future:
         x = np.asarray(x, np.float32)
         if x.ndim == 3:
             x = x[None]
@@ -178,22 +220,55 @@ class ServeEngine:
             # a stopped engine has no drain — admitting would hang the
             # future forever.  (Submitting BEFORE the first start() is
             # allowed: the queue holds until the worker comes up.)
-            self.metrics.record_rejected()
+            self.metrics.record_rejected(tenant)
             raise ServeOverload("engine is stopped; call start() first")
+        self._admit_tenant(tenant)
         req = _Request(kind, x, class_id, artifact, Future(),
-                       time.perf_counter())
+                       time.perf_counter(), tenant)
         try:
             if timeout is None:
                 self._queue.put_nowait(req)
             else:
                 self._queue.put(req, timeout=timeout)
         except queue.Full:
-            self.metrics.record_rejected()
+            self._release_tenant(tenant)
+            self.metrics.record_rejected(tenant)
             raise ServeOverload(
                 f"admission queue full ({self._queue.maxsize}); "
                 f"{self.metrics.completed} served so far") from None
         self.metrics.observe_queue_depth(self._queue.qsize())
         return req.future
+
+    # -- per-tenant quota accounting ----------------------------------------
+    def _admit_tenant(self, tenant) -> None:
+        """Reserve one unit of ``tenant``'s queue share, or raise
+        :class:`TenantOverQuota` — BEFORE the shared queue is touched, so a
+        quota-bound tenant can never convert its overflow into shared-queue
+        pressure."""
+        if tenant is None or self.tenant_quota is None:
+            return
+        with self._tenant_lock:
+            n = self._tenant_queued.get(tenant, 0)
+            if n >= self.tenant_quota:
+                self.metrics.record_rejected(tenant, over_quota=True)
+                raise TenantOverQuota(
+                    f"tenant {tenant!r} has {n} queued requests "
+                    f"(quota {self.tenant_quota}); shed load or back off")
+            self._tenant_queued[tenant] = n + 1
+
+    def _release_tenant(self, tenant) -> None:
+        if tenant is None or self.tenant_quota is None:
+            return
+        with self._tenant_lock:
+            n = self._tenant_queued.get(tenant, 0)
+            if n > 1:
+                self._tenant_queued[tenant] = n - 1
+            else:
+                self._tenant_queued.pop(tenant, None)
+
+    def tenant_queue_depths(self) -> Dict[Hashable, int]:
+        with self._tenant_lock:
+            return dict(self._tenant_queued)
 
     # -- worker -------------------------------------------------------------
     def _fulfill(self, req: _Request, value) -> None:
@@ -204,14 +279,15 @@ class ServeEngine:
         future was cancelled mid-batch has still updated the store.)"""
         if req.future.set_running_or_notify_cancel():
             req.future.set_result(value)
-            self.metrics.record_request(time.perf_counter() - req.t_submit)
+            self.metrics.record_request(time.perf_counter() - req.t_submit,
+                                        tenant=req.tenant)
         else:
             self.metrics.record_cancelled()
 
     def _fail(self, req: _Request, exc: Exception) -> None:
         if req.future.set_running_or_notify_cancel():
             req.future.set_exception(exc)
-            self.metrics.record_request(0.0, ok=False)
+            self.metrics.record_request(0.0, ok=False, tenant=req.tenant)
         else:
             self.metrics.record_cancelled()
 
@@ -236,6 +312,7 @@ class ServeEngine:
         while first is None:
             try:
                 first = self._queue.get(timeout=0.05)
+                self._release_tenant(first.tenant)
             except queue.Empty:
                 if self._stop.is_set():
                     return None
@@ -247,6 +324,7 @@ class ServeEngine:
             try:
                 nxt = self._queue.get_nowait() if rem <= 0 else \
                     self._queue.get(timeout=rem)
+                self._release_tenant(nxt.tenant)
             except queue.Empty:
                 break
             if total + nxt.n > self.max_batch:
@@ -257,13 +335,16 @@ class ServeEngine:
         return batch
 
     def _process(self, batch: List[_Request]) -> None:
-        # Group by RESOLVED artifact (default resolved once per batch, so a
-        # hot-swap lands between batches and "artifact=None" requests join
-        # the default's group — arrival order within one artifact survives
-        # however callers named it), preserving arrival order inside each.
+        # Resolve each request's artifact (default resolved once per batch,
+        # so a hot-swap lands between batches and "artifact=None" requests
+        # join the default's group), then group by the COMPILED FEATS
+        # OBJECT, not the artifact name: tenant views of one backbone share
+        # its executables, and the point of coalescing is ONE padded
+        # backbone exec for all of them — the per-tenant part (the store) is
+        # routed per request afterwards.  Arrival order inside each feats
+        # group survives.
         default = None
-        groups: Dict[str, List[_Request]] = {}
-        arts: Dict[str, Any] = {}
+        groups: Dict[int, List[Tuple[Any, _Request]]] = {}
         for r in batch:
             try:
                 if r.artifact is None:
@@ -275,31 +356,36 @@ class ServeEngine:
             except KeyError as e:
                 self._fail(r, e)
                 continue
-            arts[art.name] = art
-            groups.setdefault(art.name, []).append(r)
-        for name, reqs in groups.items():
-            self._run_group(arts[name], reqs)
+            groups.setdefault(id(art.feats), []).append((art, r))
+        for pairs in groups.values():
+            self._run_group(pairs)
 
-    def _run_group(self, art, reqs: List[_Request]) -> None:
+    def _run_group(self, pairs: List[Tuple[Any, _Request]]) -> None:
+        reqs = [r for _, r in pairs]
         try:
             x = np.concatenate([r.x for r in reqs], axis=0) \
                 if len(reqs) > 1 else reqs[0].x
             padded, n_real, bucket = pad_to_bucket(x, self.buckets)
-            feats = np.asarray(art.feats(padded))[:n_real]
+            feats = np.asarray(pairs[0][0].feats(padded))[:n_real]
             self.metrics.record_batch(n_real, bucket)
         except Exception as e:                        # noqa: BLE001
             for r in reqs:
                 self._fail(r, e)
             return
-        # Strict arrival order, but consecutive classifies between two
-        # registers see the SAME store state — classify them as ONE run
-        # (one NCM head call per run, not per request; at 64 single-frame
-        # queries per batch the per-request head dispatch would otherwise
-        # cost more than the backbone batch itself).
-        off = 0
+        # Strict arrival order, but consecutive classifies on the SAME
+        # artifact between two of its registers see the SAME store state —
+        # classify them as ONE run (one NCM head call per run, not per
+        # request; at 64 single-frame queries per batch the per-request
+        # head dispatch would otherwise cost more than the backbone batch
+        # itself).  A run must stay slice-contiguous in ``feats``, so any
+        # intervening request — a register, or another artifact's classify
+        # — flushes it.
         run: List[Tuple[_Request, int, int]] = []     # (req, start, end)
+        run_art: Any = None
 
         def flush_run() -> None:
+            nonlocal run_art
+            art, run_art = run_art, None
             if not run:
                 return
             lo, hi = run[0][1], run[-1][2]
@@ -315,9 +401,13 @@ class ServeEngine:
                     ids[s - lo:e - lo], sims[s - lo:e - lo], art.name))
             run.clear()
 
-        for r in reqs:
+        off = 0
+        for art, r in pairs:
             start, off = off, off + r.n
             if r.kind == "classify":
+                if run and run_art is not art:
+                    flush_run()
+                run_art = art
                 run.append((r, start, off))
                 continue
             flush_run()
@@ -335,4 +425,5 @@ class ServeEngine:
                 r = self._queue.get_nowait()
             except queue.Empty:
                 return
+            self._release_tenant(r.tenant)
             self._fail(r, exc)

@@ -31,24 +31,50 @@ class ServeMetrics:
 
     def __init__(self, window: int = 10_000):
         self._lock = threading.Lock()
+        self._window = window
         self._lat = deque(maxlen=window)       # seconds, completed requests
         self._t0 = time.perf_counter()
         self.completed = 0
         self.rejected = 0
+        self.over_quota = 0
         self.failed = 0
         self.cancelled = 0
         self.batches = 0
         self.batched_samples = 0               # real samples through backbone
         self.padded_samples = 0                # wasted rows from bucketing
         self.max_queue_depth = 0
+        # per-tenant accounting: counters + a bounded latency reservoir per
+        # tenant, so the noisy-neighbor benchmark can read a victim's p99
+        # straight off the shared metrics object
+        self._tenants: Dict = {}
+        # cold-start accounting (DeployedModel.warmup reports here): list of
+        # (artifact, bucket, seconds, cached) — bounded implicitly by the
+        # finite bucket/artifact set
+        self._compiles = []
 
-    def record_request(self, latency_s: float, ok: bool = True) -> None:
+    def _tenant(self, tenant):
+        t = self._tenants.get(tenant)
+        if t is None:
+            t = {"completed": 0, "rejected": 0, "over_quota": 0,
+                 "failed": 0, "lat": deque(maxlen=self._window)}
+            self._tenants[tenant] = t
+        return t
+
+    def record_request(self, latency_s: float, ok: bool = True,
+                       tenant=None) -> None:
         with self._lock:
             if ok:
                 self.completed += 1
                 self._lat.append(latency_s)
             else:
                 self.failed += 1
+            if tenant is not None:
+                t = self._tenant(tenant)
+                if ok:
+                    t["completed"] += 1
+                    t["lat"].append(latency_s)
+                else:
+                    t["failed"] += 1
 
     def record_batch(self, n_real: int, bucket: int) -> None:
         with self._lock:
@@ -56,9 +82,59 @@ class ServeMetrics:
             self.batched_samples += n_real
             self.padded_samples += bucket - n_real
 
-    def record_rejected(self) -> None:
+    def record_rejected(self, tenant=None, over_quota: bool = False) -> None:
+        """An admission rejection; ``over_quota=True`` marks a per-tenant
+        quota rejection (``TenantOverQuota``) as opposed to a full shared
+        queue (``ServeOverload``) — the isolation benchmark asserts a noisy
+        tenant's rejections are ALL the former."""
         with self._lock:
             self.rejected += 1
+            if over_quota:
+                self.over_quota += 1
+            if tenant is not None:
+                t = self._tenant(tenant)
+                t["rejected"] += 1
+                if over_quota:
+                    t["over_quota"] += 1
+
+    def record_compile(self, artifact: str, bucket: int, seconds: float,
+                       cached: bool = False) -> None:
+        """One per-bucket executable build during warmup: ``seconds`` of
+        cold-start cost, ``cached=True`` when a persistent CompileCache
+        restored the executable instead of compiling it."""
+        with self._lock:
+            self._compiles.append((artifact, int(bucket), float(seconds),
+                                   bool(cached)))
+
+    def compile_snapshot(self) -> Dict[str, float]:
+        """Cold-start cost: total warmup seconds, per-bucket event count,
+        and how many of those were cache restores vs fresh compiles."""
+        with self._lock:
+            events = list(self._compiles)
+        return {
+            "compile_events": float(len(events)),
+            "compile_s": float(sum(e[2] for e in events)),
+            "compile_cached": float(sum(1 for e in events if e[3])),
+            "compile_fresh_s": float(sum(e[2] for e in events if not e[3])),
+        }
+
+    def tenant_snapshot(self) -> Dict:
+        """Per-tenant counters + latency percentiles (the noisy-neighbor
+        acceptance numbers)."""
+        with self._lock:
+            out = {}
+            for tenant, t in self._tenants.items():
+                lat = sorted(t["lat"])
+                out[tenant] = {
+                    "completed": float(t["completed"]),
+                    "rejected": float(t["rejected"]),
+                    "over_quota": float(t["over_quota"]),
+                    "failed": float(t["failed"]),
+                    "p50_ms": percentile(lat, 50) * 1e3,
+                    "p95_ms": percentile(lat, 95) * 1e3,
+                    "p99_ms": percentile(lat, 99) * 1e3,
+                }
+            return out
 
     def record_cancelled(self) -> None:
         """Client cancelled the future while the request was queued."""
@@ -77,6 +153,9 @@ class ServeMetrics:
             self._t0 = time.perf_counter()
             self.completed = 0
             self._lat.clear()
+            for t in self._tenants.values():
+                t["completed"] = 0
+                t["lat"].clear()
 
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
@@ -87,6 +166,7 @@ class ServeMetrics:
             return {
                 "completed": float(self.completed),
                 "rejected": float(self.rejected),
+                "over_quota": float(self.over_quota),
                 "failed": float(self.failed),
                 "cancelled": float(self.cancelled),
                 "batches": float(self.batches),

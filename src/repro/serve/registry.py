@@ -14,6 +14,7 @@ wholly on the new artifact, never a mix.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
@@ -55,14 +56,40 @@ class ServedArtifact:
         dm = getattr(self.feats, "deployed_model", None)
         return int(dm.trace_count) if dm is not None else None
 
-    def warmup(self, buckets, img: int) -> None:
+    def warmup(self, buckets, img: int, cache=None, metrics=None) -> None:
+        """Pre-compile (or cache-restore) every bucket executable, then
+        prime the store's classify head for the same bucket set.  The
+        ``cache``/``metrics`` extras are forwarded when the feats callable
+        understands them (DeployedModel and FSLPipeline.deploy fns do);
+        plain warmup callables keep the old two-argument contract."""
         if isinstance(self.feats, DeployedModel):
             self.feats.warmup(
-                buckets, example=np.zeros((1, img, img, 3), np.float32))
-            return
-        fn = getattr(self.feats, "warmup", None)
-        if fn is not None:
-            fn(buckets, img=img)
+                buckets, example=np.zeros((1, img, img, 3), np.float32),
+                cache=cache, metrics=metrics, label=self.name)
+        else:
+            fn = getattr(self.feats, "warmup", None)
+            if fn is not None:
+                try:
+                    accepts = "cache" in inspect.signature(fn).parameters
+                except (TypeError, ValueError):
+                    accepts = False
+                if accepts:
+                    fn(buckets, img=img, cache=cache, metrics=metrics,
+                       label=self.name)
+                else:
+                    fn(buckets, img=img)
+        # the backbone executables are warm, but without this a fresh
+        # process's first classify still stalls ~100 ms compiling the NCM
+        # head ops — probe the feature dim off the smallest bucket and
+        # build the head's per-bucket programs now.  Best-effort: feats
+        # callables that can't take an image batch just skip it.
+        try:
+            small = min(int(b) for b in buckets)
+            feat = np.asarray(self.feats(
+                np.zeros((small, img, img, 3), np.float32)))
+            self.store.prime(int(feat.shape[-1]), buckets)
+        except Exception:
+            pass
 
 
 class ArtifactRegistry:
@@ -81,7 +108,11 @@ class ArtifactRegistry:
         becomes the default; ``default=True`` swaps it explicitly.  ``meta``
         attaches provenance (e.g. the sweep measurements behind a published
         Pareto point) readable via :meth:`metadata`."""
-        art = ServedArtifact(name, feats, store or PrototypeStore(),
+        # explicit None check: an EMPTY store is falsy (len() == 0), and
+        # `store or ...` would silently swap a caller's custom store (e.g. a
+        # sharded-classify store) for a fresh plain one
+        art = ServedArtifact(name, feats,
+                             PrototypeStore() if store is None else store,
                              dict(meta or {}))
         with self._lock:
             self._artifacts[name] = art

@@ -32,8 +32,14 @@ __all__ = ["PrototypeStore"]
 class PrototypeStore:
     """Thread-safe incremental Nearest-Class-Mean state.
 
-    ``register`` is O(shots) and ``classify`` is one (Q, C) similarity
-    against a cached prototype matrix rebuilt only when the store changed.
+    ``register`` is O(shots + C) and rebuilds the cached prototype matrix
+    eagerly — registrations are onboarding, classifies are the latency
+    path, so the finalize cost (including its one-off per-shape XLA
+    compile) must never land on a classify.  ``classify`` is one (Q, C)
+    similarity with the query rows padded to a power-of-two bucket, the
+    same shape discipline the engine applies to backbone batches: the set
+    of head programs XLA ever compiles is bounded and :meth:`prime` can
+    build them ahead of traffic.
     """
 
     def __init__(self):
@@ -83,8 +89,13 @@ class PrototypeStore:
                 jnp.asarray(f), jnp.zeros((f.shape[0],), jnp.int32))
             self._sums[class_id] = np.asarray(sums[0])
             self._counts[class_id] = int(np.asarray(counts[0]))
-            self._means = None
+            self._rebuild_locked()
             return self._counts[class_id]
+
+    def _rebuild_locked(self) -> None:
+        sums = jnp.asarray(np.stack([self._sums[c] for c in self._order]))
+        counts = jnp.asarray([float(self._counts[c]) for c in self._order])
+        self._means = np.asarray(ncm.finalize_means(sums, counts))
 
     def prototypes(self) -> Tuple[np.ndarray, Tuple[Hashable, ...]]:
         """(C, D) L2-normalized class means + matching class ids, in
@@ -93,26 +104,53 @@ class PrototypeStore:
             if not self._order:
                 raise RuntimeError("no classes registered yet")
             if self._means is None:
-                sums = jnp.asarray(
-                    np.stack([self._sums[c] for c in self._order]))
-                counts = jnp.asarray(
-                    [float(self._counts[c]) for c in self._order])
-                self._means = np.asarray(ncm.finalize_means(sums, counts))
+                self._rebuild_locked()
             return self._means, tuple(self._order)
+
+    def _sims(self, q: np.ndarray, means: np.ndarray) -> np.ndarray:
+        # jnp end to end so a served batch agrees bitwise with an offline
+        # ncm_classify over the same rows (same XLA reduction, same shapes)
+        return np.asarray(ncm._l2(jnp.asarray(q)) @ jnp.asarray(means).T)
 
     def classify(self, query_features
                  ) -> Tuple[List[Hashable], np.ndarray]:
         """NCM over the current store: (n, D) queries -> (class ids, (n, C)
-        cosine similarities).  A 1-D query is accepted as one row."""
+        cosine similarities).  A 1-D query is accepted as one row.
+
+        Query rows pad to a power-of-two bucket (sliced back before the
+        argmax) — every head op is per-row independent, so the padded
+        program's live rows are bit-for-bit the unpadded ones, and the
+        bounded shape set means no request ever stalls on an XLA compile
+        once :meth:`prime` (or earlier traffic) built its bucket."""
         q = np.asarray(query_features, np.float32)
         if q.ndim == 1:
             q = q[None, :]
         means, ids = self.prototypes()
-        # jnp end to end so a served batch agrees bitwise with an offline
-        # ncm_classify over the same rows (same XLA reduction, same shapes)
-        sims = np.asarray(ncm._l2(jnp.asarray(q)) @ jnp.asarray(means).T)
+        n = q.shape[0]
+        nb = 1 << max(n - 1, 0).bit_length()
+        if nb != n:
+            q = np.concatenate(
+                [q, np.zeros((nb - n, q.shape[1]), np.float32)])
+        sims = self._sims(q, means)[:n]
         pred = sims.argmax(axis=-1)
         return [ids[int(i)] for i in pred], sims
+
+    def prime(self, dim: int, buckets: Sequence[int] = (1,)) -> None:
+        """Build the classify head's per-bucket programs ahead of traffic
+        (the engine calls this from warmup with its backbone bucket set).
+        Without it, a fresh process's first classify stalls ~100 ms on
+        eager XLA compiles of the head ops even when every backbone
+        executable came out of the compile cache.  Uses the current
+        prototype matrix when classes exist, a (1, D) dummy otherwise —
+        a later first-use C still compiles once, but that matmul is the
+        small residue, not the full head."""
+        try:
+            means, _ = self.prototypes()
+        except RuntimeError:
+            means = np.zeros((1, int(dim)), np.float32)
+        for nb in sorted({int(b) for b in buckets} | {1}):
+            if nb >= 1:
+                self._sims(np.zeros((nb, int(dim)), np.float32), means)
 
     def reset(self) -> None:
         with self._lock:

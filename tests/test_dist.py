@@ -1,0 +1,222 @@
+"""repro.dist unit coverage (ISSUE 6 satellite): the shape-driven spec
+policy behind the sharding trees, act_sharding's named constraint points,
+and the serving mesh helpers' single-device fallback.  Multi-device tree
+construction runs in a subprocess (forced host device count), like
+test_multidevice.py.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.dist import act_sharding
+from repro.dist import sharding as sh
+
+
+class _StubMesh:
+    """Just enough mesh for the spec functions: a ``.shape`` axis->size
+    mapping lets divisibility policy be tested without N real devices."""
+
+    def __init__(self, **axes):
+        self.shape = dict(axes)
+
+
+def _mesh1(*axes):
+    """A real 1-device mesh (NamedSharding needs real devices)."""
+    shape = (1,) * len(axes)
+    return Mesh(np.array(jax.devices()[:1]).reshape(shape), axes)
+
+
+# ---------------------------------------------------------------------------
+# _param_spec: TP on the trailing dim, FSDP on the second-to-last,
+# divisibility-or-replicate, no axis used twice
+# ---------------------------------------------------------------------------
+def test_param_spec_tp_and_fsdp_assignment():
+    mesh = _StubMesh(data=2, model=4)
+    assert sh._param_spec((8, 12), mesh) == P("data", "model")
+    assert sh._param_spec((8, 13), mesh) == P("data", None)   # 13 % 4 != 0
+    assert sh._param_spec((7, 12), mesh) == P(None, "model")  # 7 % 2 != 0
+    assert sh._param_spec((7, 13), mesh) == P(None, None)     # replicate
+    assert sh._param_spec((0, 12), mesh) == P(None, "model")  # zero-size dim
+    assert sh._param_spec((16,), mesh) == P(None)             # vectors
+    assert sh._param_spec((), mesh) == P()                    # scalars
+
+
+def test_param_spec_never_reuses_an_axis():
+    # default expert axis is "data": in (E, d, f) the FSDP assignment on the
+    # middle dim claims "data" first, so the leading expert dim must stay
+    # replicated rather than double-book the axis
+    mesh = _StubMesh(data=2, model=4)
+    assert sh._param_spec((2, 6, 8), mesh) == P(None, "data", "model")
+    # when FSDP can't take it (7 % 2 != 0) the expert dim gets the axis
+    assert sh._param_spec((2, 7, 8), mesh) == P("data", None, "model")
+
+
+def test_param_spec_honors_policy_knobs():
+    mesh = _StubMesh(fsdp=2, model=4, exp=3)
+    old_fsdp, old_exp = sh._FSDP_AXES, sh._EXPERT_AXIS
+    try:
+        sh.set_fsdp_axes(("fsdp",))
+        sh.set_moe_expert_axis("exp")
+        assert sh._param_spec((8, 12), mesh) == P("fsdp", "model")
+        assert sh._param_spec((3, 8, 12), mesh) == P("exp", "fsdp", "model")
+    finally:
+        sh.set_fsdp_axes(old_fsdp)
+        sh.set_moe_expert_axis(old_exp)
+
+
+def test_param_spec_missing_axes_replicate():
+    # a mesh without "model"/"data" axes (e.g. serve mesh names) -> replicate
+    mesh = _StubMesh(pipe=4)
+    assert sh._param_spec((8, 12), mesh) == P(None, None)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+def test_batch_spec_microbatch_vs_serving_dim():
+    mesh = _StubMesh(data=2)
+    assert sh._batch_spec((4, 8, 16), mesh) == P(None, "data", None)
+    assert sh._batch_spec((8, 16), mesh) == P("data", None)   # serving (B,..)
+    assert sh._batch_spec((7,), mesh) == P()                  # indivisible
+    assert sh._batch_spec((), mesh) == P()
+    assert sh._batch_spec((8, 16), _StubMesh(model=4)) == P()  # no data axis
+
+
+def test_batch_spec_multi_axis_then_fallback():
+    mesh = _StubMesh(pod=2, data=2)
+    # 8 % (2*2) == 0: shard over BOTH data axes
+    assert sh._batch_spec((8, 16), mesh) == P(("pod", "data"), None)
+    # 6 % 4 != 0 but 6 % 2 == 0: fall back to the innermost axis alone
+    assert sh._batch_spec((6, 16), mesh) == P("data", None)
+
+
+def test_cache_spec_shards_batch_after_layer_axis():
+    mesh = _StubMesh(data=2)
+    assert sh._cache_spec((4, 8, 2, 5), mesh) == P(None, "data", None, None)
+    assert sh._cache_spec((4, 7, 2, 5), mesh) == P()          # indivisible
+    assert sh._cache_spec((4,), mesh) == P()                  # len counters
+
+
+# ---------------------------------------------------------------------------
+# tree construction over real (1-device) meshes
+# ---------------------------------------------------------------------------
+def test_tree_shardings_build_namedshardings():
+    mesh = _mesh1("data", "model")
+    params = {"w": jnp.zeros((4, 8)), "b": jnp.zeros((8,)), "s": jnp.zeros(())}
+    tree = sh.tree_param_shardings(params, mesh)
+    assert set(tree) == {"w", "b", "s"}
+    for leaf in jax.tree.leaves(tree):
+        assert isinstance(leaf, NamedSharding) and leaf.mesh is mesh
+    assert tree["w"].spec == P("data", "model")   # size-1 axes divide all
+    assert tree["s"].spec == P()
+    # opt moments co-locate with their params (ZeRO-1)
+    opt = sh.tree_opt_shardings(params, mesh)
+    assert opt["w"].spec == tree["w"].spec
+    # the shardings are usable: device_put + jit round trip
+    placed = jax.device_put(params["w"], tree["w"])
+    np.testing.assert_array_equal(np.asarray(jax.jit(lambda v: v + 1)(placed)),
+                                  np.ones((4, 8)))
+    batch = sh.tree_batch_shardings({"x": jnp.zeros((8, 16))}, mesh)
+    assert batch["x"].spec == P("data", None)
+    cache = sh.tree_cache_shardings({"k": jnp.zeros((2, 8, 4))}, mesh)
+    assert cache["k"].spec == P(None, "data", None)
+
+
+# ---------------------------------------------------------------------------
+# act_sharding: named constraint points
+# ---------------------------------------------------------------------------
+def test_act_sharding_unbound_is_identity():
+    x = jnp.ones((4, 4))
+    assert act_sharding.constrain(x, "never-bound") is x
+    assert act_sharding.get_rule("never-bound") is None
+
+
+def test_act_sharding_rules_bind_nest_and_restore():
+    rule = NamedSharding(_mesh1("model"), P("model"))
+    assert act_sharding.get_rule("a") is None
+    with act_sharding.rules({"a": rule}):
+        assert act_sharding.get_rule("a") is rule
+        with act_sharding.rules({"b": rule}):             # merges, not replaces
+            assert act_sharding.get_rule("a") is rule
+            assert act_sharding.get_rule("b") is rule
+        assert act_sharding.get_rule("b") is None         # inner scope popped
+    assert act_sharding.get_rule("a") is None             # fully restored
+
+
+def test_act_sharding_rules_restore_on_exception():
+    rule = NamedSharding(_mesh1("model"), P("model"))
+    with pytest.raises(RuntimeError, match="boom"):
+        with act_sharding.rules({"a": rule}):
+            raise RuntimeError("boom")
+    assert act_sharding.get_rule("a") is None
+
+
+def test_act_sharding_constrain_applies_under_jit():
+    mesh = _mesh1("model")
+    rule = NamedSharding(mesh, P("model", None))
+
+    def f(x):
+        return act_sharding.constrain(x, "pt") * 2
+
+    x = jnp.ones((2, 3))
+    with act_sharding.rules({"pt": rule}):
+        out = jax.jit(f)(x)
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((2, 3)))
+
+
+def test_act_sharding_rank_mismatch_is_skipped():
+    """A rule whose spec rank exceeds the tensor rank is a no-op, never an
+    error — the same point is reused across ranks (decode vs prefill)."""
+    rule = NamedSharding(_mesh1("model"), P("model", None))
+    x = jnp.ones((4,))                                    # rank 1 < spec rank 2
+    with act_sharding.rules({"pt": rule}):
+        assert act_sharding.constrain(x, "pt") is x
+        out = jax.jit(lambda v: act_sharding.constrain(v, "pt") + 1)(x)
+    np.testing.assert_array_equal(np.asarray(out), 2 * np.ones((4,)))
+
+
+# ---------------------------------------------------------------------------
+# serving mesh helpers: single-device fallback + row-spec policy
+# ---------------------------------------------------------------------------
+def test_serve_mesh_single_device_returns_none():
+    assert sh.serve_mesh() is None                        # 1 local CPU device
+    assert sh.serve_mesh(jax.devices()[:1]) is None
+    assert sh.serve_mesh([]) is None
+
+
+def test_prototype_spec_divisibility_policy():
+    mesh = _StubMesh(model=4)
+    assert sh.prototype_spec(8, mesh) == P("model", None)
+    assert sh.prototype_spec(6, mesh) == P()              # 6 % 4: replicate
+    assert sh.prototype_spec(0, mesh) == P()
+    assert sh.prototype_spec(8, _StubMesh(x=4)) == P()    # axis absent
+    assert sh.prototype_spec(8, _StubMesh(rows=4), axis="rows") == \
+        P("rows", None)
+
+
+def test_serve_mesh_multidevice_subprocess():
+    """4 forced host devices: serve_mesh builds the 1-D mesh, prototype_spec
+    shards divisible row counts, and a device_put through the resulting
+    NamedSharding actually distributes rows."""
+    from test_multidevice import run_py
+
+    out = run_py("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.dist.sharding import prototype_spec, serve_mesh
+        assert len(jax.devices()) == 4
+        mesh = serve_mesh()
+        assert mesh is not None and mesh.shape["model"] == 4
+        assert serve_mesh(jax.devices()[:2]).shape["model"] == 2
+        assert prototype_spec(8, mesh) == P("model", None)
+        assert prototype_spec(6, mesh) == P()
+        m = jnp.arange(8 * 3, dtype=jnp.float32).reshape(8, 3)
+        placed = jax.device_put(m, NamedSharding(mesh, prototype_spec(8, mesh)))
+        assert len(placed.sharding.device_set) == 4       # rows spread out
+        np.testing.assert_array_equal(np.asarray(placed), np.asarray(m))
+        print("SERVE_MESH_OK")
+    """, devices=4)
+    assert "SERVE_MESH_OK" in out
