@@ -97,10 +97,15 @@ def run(quick: bool = False, smoke: bool = False) -> Dict[str, float]:
         emit(f"streamline_chain{n_chain}_linear_ms", tl * 1e3)
         emit("index_speedup_x", tl / ti)
 
-    # -- serving hot path: interpreter vs f32 artifact vs int artifact ------
+    # -- serving hot path: interpreter vs f32 vs int (unfused AND fused) ----
+    # deployed_int_* keeps its PR 2 meaning (the unfused lowering) so the
+    # trajectory stays diffable; deployed_int_fused_* is the PR 7 datapath
+    # repro.compile(datapath="int") now builds by default.
     hw = build_dataflow(graph, RESNET9_BUILD_STEPS)
     dm = repro.compile(graph, recipe="resnet9")
-    dm_int = repro.compile(graph, recipe="resnet9", datapath="int")
+    dm_int = repro.compile(graph, recipe="resnet9", datapath="int",
+                           fuse=False)
+    dm_fus = repro.compile(graph, recipe="resnet9", datapath="int")
     for batch in ((1,) if smoke else (1, 16)):
         x = jax.random.uniform(jax.random.PRNGKey(1), (batch, 32, 32, 3),
                                jnp.float32)
@@ -108,17 +113,25 @@ def run(quick: bool = False, smoke: bool = False) -> Dict[str, float]:
         t_interp = _bench(lambda: execute(hw, {"x": x_q})[0], iters)
         t_deploy = _bench(lambda: dm(x_q), iters)
         t_int = _bench(lambda: dm_int(x_q), iters)
+        t_fus = _bench(lambda: dm_fus(x_q), iters)
         match = bool(np.array_equal(np.asarray(execute(hw, {"x": x_q})[0]),
                                     np.asarray(dm(x_q))))
         match_int = bool(np.array_equal(np.asarray(dm(x_q)),
                                         np.asarray(dm_int(x_q))))
+        match_fus = bool(np.array_equal(np.asarray(dm(x_q)),
+                                        np.asarray(dm_fus(x_q))))
         tag = f"b{batch}"
         emit(f"interp_{tag}_ms", t_interp * 1e3)
         emit(f"deployed_{tag}_ms", t_deploy * 1e3)
         emit(f"deployed_int_{tag}_ms", t_int * 1e3)
+        emit(f"deployed_int_fused_{tag}_ms", t_fus * 1e3)
         emit(f"speedup_{tag}_x", t_interp / t_deploy)
+        emit(f"fused_vs_f32_{tag}_x", t_deploy / t_fus)
+        emit(f"fused_vs_unfused_{tag}_x", t_int / t_fus)
         emit(f"bit_for_bit_{tag}", int(match))
         emit(f"bit_for_bit_int_{tag}", int(match_int))
+        emit(f"bit_for_bit_int_fused_{tag}", int(match_fus))
+    emit("fused_interior_qdq_pairs", dm_fus.qdq_counts()["interior_pairs"])
 
     # -- storage footprint per bit-width config -----------------------------
     # w16a16 runs at a reduced width: its 65535-level threshold tables are
@@ -144,6 +157,58 @@ def run(quick: bool = False, smoke: bool = False) -> Dict[str, float]:
     return results
 
 
+def run_fused(quick: bool = False, smoke: bool = False) -> Dict[str, float]:
+    """PR 7 acceptance rows (the ``BENCH_pr7.json`` compile half): fused int
+    artifact vs f32 vs unfused int at b1 AND b16, bit-for-bit flags, and the
+    structural claim behind the speedup — zero interior dequantize→quantize
+    pairs and every MVAU on an integer kernel path.  ``fused_vs_f32_b*_x``
+    >= 1 is the acceptance floor: narrow bit-widths must be the FAST path,
+    not just the small one."""
+    results: Dict[str, float] = {}
+
+    def emit(metric: str, value) -> None:
+        results[metric] = float(value)
+        print(f"pr7,{metric},{value:.4g}"
+              if isinstance(value, float) else f"pr7,{metric},{value}")
+
+    iters = 2 if smoke else (5 if quick else 15)
+    width = 8 if smoke else WIDTH
+    params = resnet9.init_params(jax.random.PRNGKey(0), width)
+    graph = resnet9.export_graph(params, QCFG, width=width)
+    dm_f32 = repro.compile(graph, recipe="resnet9")
+    dm_unf = repro.compile(graph, recipe="resnet9", datapath="int",
+                           fuse=False)
+    dm_fus = repro.compile(graph, recipe="resnet9", datapath="int")
+    for batch in (1, 16):
+        x_q = fake_quant(jax.random.uniform(jax.random.PRNGKey(1),
+                                            (batch, 32, 32, 3), jnp.float32),
+                         QCFG.act)
+        t_f32 = _bench(lambda: dm_f32(x_q), iters)
+        t_unf = _bench(lambda: dm_unf(x_q), iters)
+        t_fus = _bench(lambda: dm_fus(x_q), iters)
+        tag = f"b{batch}"
+        emit(f"f32_{tag}_ms", t_f32 * 1e3)
+        emit(f"int_unfused_{tag}_ms", t_unf * 1e3)
+        emit(f"int_fused_{tag}_ms", t_fus * 1e3)
+        emit(f"fused_vs_f32_{tag}_x", t_f32 / t_fus)
+        emit(f"fused_vs_unfused_{tag}_x", t_unf / t_fus)
+        emit(f"bit_for_bit_fused_{tag}",
+             int(np.array_equal(np.asarray(dm_f32(x_q)),
+                                np.asarray(dm_fus(x_q)))))
+    qdq = dm_fus.qdq_counts()
+    emit("fused_interior_qdq_pairs", qdq["interior_pairs"])
+    emit("fused_surviving_quantize", qdq["quantize"])
+    emit("fused_surviving_dequantize", qdq["dequantize"])
+    int_kernels = sum(1 for r in dm_fus.dispatch_table()
+                      if r["kernel"] in ("fused-pallas", "int8-dot",
+                                         "f32-gemm", "fast-count",
+                                         "int-shift"))
+    emit("fused_int_kernel_nodes", int_kernels)
+    emit("weight_bytes_f32", dm_f32.weight_bytes())
+    emit("weight_bytes_int_fused", dm_fus.weight_bytes())
+    return results
+
+
 def main(argv=None) -> None:
     import argparse
 
@@ -151,8 +216,14 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--smoke", action="store_true",
                     help="minimal single-config run for the CI smoke step")
+    ap.add_argument("--fused", action="store_true",
+                    help="run only the PR 7 fused-datapath rows "
+                         "(benchmarks/run.py --only pr7 writes BENCH_pr7.json)")
     args = ap.parse_args(argv)
-    run(quick=args.quick, smoke=args.smoke)
+    if args.fused:
+        run_fused(quick=args.quick, smoke=args.smoke)
+    else:
+        run(quick=args.quick, smoke=args.smoke)
 
 
 if __name__ == "__main__":

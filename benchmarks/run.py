@@ -10,8 +10,10 @@ bytes per bit-width config), the serve benchmark to ``BENCH_pr3.json``
 benchmark to ``BENCH_pr4.json`` (per-point sweep wall-clock, speedup vs
 serial, resume speedup), and the cluster benchmark to ``BENCH_pr6.json``
 (cold start vs compile-cache restore, overload tail latency, noisy-neighbor
-isolation) — the machine-readable perf trajectory successive PRs diff
-against.
+isolation), and the fused-datapath benchmark to ``BENCH_pr7.json`` (fused
+int artifact vs f32 vs unfused int at b1/b16, serve-side rps rows, interior
+quantize/dequantize census) — the machine-readable perf trajectory
+successive PRs diff against.
 """
 
 from __future__ import annotations
@@ -30,7 +32,7 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table2,table3,fig5,roofline,compile,"
-                         "serve,cluster,farm")
+                         "serve,cluster,farm,pr7")
     ap.add_argument("--bench-json", default=None,
                     help="where the compile benchmark dict is written "
                          "(default: repo-root BENCH_pr2.json for full runs; "
@@ -79,6 +81,16 @@ def main(argv=None) -> None:
         from benchmarks import farm_bench
         farm_bench.write_json(farm_bench.run(quick=args.quick),
                               quick=args.quick)
+    if want("pr7"):
+        from benchmarks import bench_io, compile_bench, serve_bench
+        res = compile_bench.run_fused(quick=args.quick)
+        serve = serve_bench.run(quick=args.quick)
+        res.update({f"serve_{k}": v for k, v in serve.items()
+                    if k.startswith(("single_rps", "batched_rps", "b16_rps",
+                                     "batch_speedup"))})
+        bench_io.write_bench_json(res, benchmark="pr7",
+                                  basename="BENCH_pr7.json",
+                                  quick=args.quick)
     if want("roofline"):
         from benchmarks import roofline
         try:

@@ -22,8 +22,11 @@ paper's serving regime is a SMALL model fed single camera frames (61.5 fps
 on the FPGA), where per-request dispatch/queue overhead rivals compute and
 dynamic batching pays the most; it also keeps the benchmark CI-sized.  At
 wider models the batched path turns compute-bound and the ratio converges
-to the pure per-sample amortization (~4x for the int datapath on CPU,
-whose int32 matmuls don't beat f32 off-TPU — the PR 2 finding).  Prints ``serve,<metric>,<value>``
+to the pure per-sample amortization.  Since the PR 7 fused integer
+datapath the "int" artifact serves at least as fast as f32 (the fused
+graph runs exact integer compute through the backend's fast GEMM with no
+interior dequantize→quantize round-trips — ``b16_rps_*`` rows compare the
+two at a fixed 16-request burst).  Prints ``serve,<metric>,<value>``
 CSV lines and RETURNS the dict; ``main`` serializes it to ``BENCH_pr3.json``
 (full runs) or the system temp dir (``--quick``/``--smoke`` — never
 clobbers the committed trajectory file).
@@ -101,9 +104,21 @@ def run(quick: bool = False, smoke: bool = False, *,
                 f.result(timeout=60)
             burst = n_burst / (time.perf_counter() - t0)
 
+            # fixed 16-request bursts: the b16 bucket the PR 7 acceptance
+            # compares int-vs-f32 at (single ≈ b1, batched ≈ max_batch)
+            n_b16 = 4 if smoke else (8 if quick else 16)
+            t0 = time.perf_counter()
+            for _ in range(n_b16):
+                f16 = [eng.submit_classify(frame, artifact=name, timeout=30.0)
+                       for _ in range(16)]
+                for f in f16:
+                    f.result(timeout=60)
+            b16 = n_b16 * 16 / (time.perf_counter() - t0)
+
             snap = eng.metrics.snapshot()
             emit(f"single_rps_{name}", single)
             emit(f"batched_rps_{name}", burst)
+            emit(f"b16_rps_{name}", b16)
             emit(f"batch_speedup_x_{name}", burst / single)
             emit(f"burst_p50_ms_{name}", snap["p50_ms"])
             emit(f"burst_p95_ms_{name}", snap["p95_ms"])

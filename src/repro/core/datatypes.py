@@ -51,7 +51,17 @@ __all__ = [
     "datatype_rule",
     "InferDataTypes",
     "LowerToIntegerDatapath",
+    "FuseIntegerDatapath",
+    "F32_EXACT_BOUND",
 ]
+
+# Largest integer magnitude for which EVERY partial sum of an integer-code
+# matmul is exactly representable in float32 (24-bit mantissa).  When the
+# reachable accumulator range stays inside ±2**24, running the code matmul
+# through the f32 GEMM (the only fast GEMM most non-TPU backends have) is
+# bit-for-bit equal to exact integer accumulation — the kernels key their
+# fast path off the ``acc_f32_exact`` attr derived from this bound.
+F32_EXACT_BOUND = 2 ** 24
 
 
 # ---------------------------------------------------------------------------
@@ -159,13 +169,19 @@ def _rule_threshold(node, in_specs, g):
         node.attrs.get("out_scale", 1.0), node.attrs.get("out_bias", 0.0))
 
 
-@datatype_rule("mvau_int")
+@datatype_rule("mvau_int", "matmul_int", "multithreshold_int")
 def _rule_mvau_int(node, in_specs, g):
     bits = node.attrs.get("out_bits")
     if bits is None:
         return None
     return FixedPointSpec(bits, node.attrs["out_frac_bits"],
                           node.attrs.get("out_signed", False))
+
+
+@datatype_rule("requantize")
+def _rule_requantize(node, in_specs, g):
+    return FixedPointSpec(node.attrs["bits"], node.attrs["frac_bits"],
+                          node.attrs.get("signed", True))
 
 
 @datatype_rule("global_acc_pool")
@@ -266,6 +282,40 @@ def _fits_int8(spec: FixedPointSpec) -> bool:
     return spec.qmin >= -128 and spec.qmax <= 127
 
 
+_INT32_MIN = -(2 ** 31)
+_INT32_MAX = 2 ** 31 - 1
+
+
+def _pow2_frac(scale: float) -> Optional[int]:
+    """``f`` such that ``2**-f == scale`` exactly, else None."""
+    if not (scale > 0.0) or not math.isfinite(scale):
+        return None
+    mantissa, exp = math.frexp(scale)     # scale = mantissa * 2**exp
+    if mantissa != 0.5:
+        return None
+    return 1 - exp
+
+
+def _subset_sum_bounds(w_codes: np.ndarray, x_lo: int,
+                       x_hi: int) -> tuple:
+    """Bounds on EVERY partial sum of ``x @ w`` over integer codes.
+
+    Each product ``w[k, n] * x[k]`` lies in ``[min(w*x_lo, w*x_hi),
+    max(w*x_lo, w*x_hi)]``; any subset of them (any accumulation order's
+    intermediate state) sums to at most the positive parts and at least the
+    negative parts.  This is the bound that gates both the int32-overflow
+    check and the f32-exact-GEMM window (``F32_EXACT_BOUND``): the *final*
+    range [acc_lo, acc_hi] is not enough, because signed cancellation can
+    make an intermediate sum exceed the final extremes.
+    """
+    w64 = w_codes.astype(np.int64)
+    term_hi = np.maximum(w64 * x_lo, w64 * x_hi)
+    term_lo = np.minimum(w64 * x_lo, w64 * x_hi)
+    sub_hi = int(np.clip(term_hi, 0, None).sum(axis=0).max())
+    sub_lo = int(np.clip(term_lo, None, 0).sum(axis=0).min())
+    return sub_lo, sub_hi
+
+
 def LowerToIntegerDatapath(g: Graph) -> Graph:
     """Rewrite the float-emulated HW graph to the integer datapath.
 
@@ -363,11 +413,13 @@ def LowerToIntegerDatapath(g: Graph) -> Graph:
             neg = np.clip(w64, None, 0).sum(axis=0)
             acc_hi = int((pos * xspec.qmax + neg * xspec.qmin).max())
             acc_lo = int((pos * xspec.qmin + neg * xspec.qmax).min())
+            sub_lo, sub_hi = _subset_sum_bounds(w_codes, xspec.qmin,
+                                                xspec.qmax)
             # >= so that the never-fires sentinel acc_hi + 1 stays int32 too
-            if acc_lo < -(2**31) or acc_hi >= 2**31 - 1:
+            if sub_lo < _INT32_MIN or sub_hi >= _INT32_MAX:
                 raise GraphBuildError(
                     f"mvau '{node.outputs[0]}' in graph '{g.name}': reachable "
-                    f"accumulator range [{acc_lo}, {acc_hi}] exceeds the "
+                    f"accumulator range [{sub_lo}, {sub_hi}] exceeds the "
                     "int32 datapath — narrow the weight/activation grid "
                     f"(annotated accumulator: {acc.describe()})")
             t = np.asarray(g.initializers[t_name], np.float64)
@@ -378,7 +430,10 @@ def LowerToIntegerDatapath(g: Graph) -> Graph:
             # golden-IO verification catches
             t_int = np.clip(t_int, float(acc.qmin), float(acc.qmax) + 1.0)
             t_int = np.clip(t_int, float(acc_lo), float(acc_hi) + 1.0)
-            t_int = t_int.astype(np.int32)
+            # count = Σ 1[acc ≥ Tᵢ] is invariant under threshold permutation,
+            # so the sorted table is a free canonical form — it is what lets
+            # the fused kernels binary-search instead of dense-compare
+            t_int = np.sort(t_int.astype(np.int32), axis=-1)
             g.initializers[w_name] = stored
             g.initializers[t_name] = t_int
             g.dtypes[w_name] = wspec
@@ -392,10 +447,104 @@ def LowerToIntegerDatapath(g: Graph) -> Graph:
                 "out_bits": out_spec.total_bits,
                 "out_frac_bits": out_spec.frac_bits,
                 "out_signed": out_spec.signed,
+                "acc_lo": acc_lo,
+                "acc_hi": acc_hi,
+                "acc_f32_exact": (sub_lo >= -F32_EXACT_BOUND
+                                  and sub_hi <= F32_EXACT_BOUND),
+                "t_sorted": True,
             }
             int_dom[node.outputs[0]] = out_spec
             g.dtypes[node.outputs[0]] = out_spec
             continue
+        if node.op == "multithreshold":
+            x_name, t_name = node.inputs
+            xspec = int_dom.get(x_name)
+            out_scale = float(node.attrs.get("out_scale", 1.0))
+            out_base = int(node.attrs.get("out_base", 0))
+            levels = _spec_for_levels(g, t_name)
+            out_spec = threshold_output_spec(
+                levels or 0, out_base, out_scale,
+                float(node.attrs.get("out_bias", 0.0)))
+            if xspec is None or t_name not in g.initializers \
+                    or out_spec is None \
+                    or node.attrs.get("channel_axis", -1) != -1 \
+                    or xspec.qmax > F32_EXACT_BOUND \
+                    or xspec.qmin < -F32_EXACT_BOUND:
+                raise GraphBuildError(
+                    f"cannot lower multithreshold '{node.outputs[0]}' in "
+                    f"graph '{g.name}' to the integer datapath: needs an "
+                    "integer-domain activation inside the f32-exact window, "
+                    "trailing-axis constant thresholds and a power-of-two "
+                    "out_scale")
+            # Exact input-code range: the producer's reachable accumulator
+            # range when known (matmul_int), else the annotated spec range.
+            x_lo, x_hi = xspec.qmin, xspec.qmax
+            prod = g.producer(x_name)
+            if prod is not None and prod.op == "matmul_int":
+                x_lo, x_hi = prod.attrs["acc_lo"], prod.attrs["acc_hi"]
+            if x_lo < _INT32_MIN or x_hi >= _INT32_MAX:
+                raise GraphBuildError(
+                    f"multithreshold '{node.outputs[0]}' in graph '{g.name}': "
+                    f"input code range [{x_lo}, {x_hi}] exceeds the int32 "
+                    "datapath")
+            t = np.asarray(g.initializers[t_name], np.float64)
+            # q ≥ ceil(T / s) ⟺ q·s ≥ T (s > 0): exact threshold rescale
+            t_int = np.ceil(t / float(xspec.scale))
+            t_int = np.clip(t_int, float(x_lo), float(x_hi) + 1.0)
+            t_int = np.sort(t_int.astype(np.int32), axis=-1)
+            g.initializers[t_name] = t_int
+            g.dtypes[t_name] = xspec
+            node.op = "multithreshold_int"
+            node.attrs = {
+                "out_base": out_base,
+                "out_bits": out_spec.total_bits,
+                "out_frac_bits": out_spec.frac_bits,
+                "out_signed": out_spec.signed,
+                "t_sorted": True,
+            }
+            int_dom[node.outputs[0]] = out_spec
+            g.dtypes[node.outputs[0]] = out_spec
+            continue
+        if node.op == "matmul" and len(node.inputs) == 2:
+            x_name, w_name = node.inputs
+            xspec = int_dom.get(x_name)
+            wspec = g.dtypes.get(w_name)
+            if xspec is not None and wspec is not None \
+                    and w_name in g.initializers:
+                w = np.asarray(g.initializers[w_name])
+                acc = accumulator_spec(xspec, wspec, w.shape[0])
+                w_codes = np.asarray(quant.quantize(w, wspec))
+                sub_lo, sub_hi = _subset_sum_bounds(w_codes, xspec.qmin,
+                                                    xspec.qmax)
+                # Only rewrite inside the f32-exact window: there the float
+                # emulation's GEMM over dequantized values IS the integer
+                # matmul (scaled by an exact power of two), so the rewrite
+                # is bit-for-bit.  Outside it the float graph's own sums
+                # round, and an integer rewrite would *change* semantics.
+                if -F32_EXACT_BOUND <= sub_lo and sub_hi <= F32_EXACT_BOUND:
+                    w64 = w_codes.astype(np.int64)
+                    pos = np.clip(w64, 0, None).sum(axis=0)
+                    neg = np.clip(w64, None, 0).sum(axis=0)
+                    acc_hi = int((pos * xspec.qmax + neg * xspec.qmin).max())
+                    acc_lo = int((pos * xspec.qmin + neg * xspec.qmax).min())
+                    stored, packed = _storage_array(w_codes, wspec)
+                    g.initializers[w_name] = stored
+                    g.dtypes[w_name] = wspec
+                    node.op = "matmul_int"
+                    node.attrs = {
+                        "w_packed": packed,
+                        "w_bits": wspec.total_bits,
+                        "int8_ok": _fits_int8(xspec) and _fits_int8(wspec),
+                        "out_bits": acc.total_bits,
+                        "out_frac_bits": acc.frac_bits,
+                        "out_signed": acc.signed,
+                        "acc_lo": acc_lo,
+                        "acc_hi": acc_hi,
+                        "acc_f32_exact": True,
+                    }
+                    int_dom[node.outputs[0]] = acc
+                    g.dtypes[node.outputs[0]] = acc
+                    continue
         in_int = [t for t in node.inputs if t in int_dom]
         lowerable = False
         out_spec = None
@@ -444,5 +593,189 @@ def LowerToIntegerDatapath(g: Graph) -> Graph:
         int_dom[raw] = spec
         g.dtypes[raw] = spec
         g.dtypes[out] = None
+    g.toposort()
+    return g
+
+
+# ---------------------------------------------------------------------------
+# FuseIntegerDatapath — collapse the lowered graph into fused integer nodes
+# ---------------------------------------------------------------------------
+_THRESHOLDED_OPS = ("mvau_int", "multithreshold_int")
+
+
+def _compose_thresholds(t1: np.ndarray, base1: int,
+                        t2: np.ndarray) -> np.ndarray:
+    """Fold a threshold stage into its producer's threshold table.
+
+    Stage 1 emits ``out1 = base1 + Σᵢ 1[x ≥ t1ᵢ]``; stage 2 computes
+    ``Σⱼ 1[out1 ≥ t2ⱼ]``.  With t1 sorted ascending, ``out1 ≥ t2ⱼ`` ⟺
+    ``count1 ≥ cⱼ`` (``cⱼ = t2ⱼ − base1``) ⟺ ``x ≥ t1[cⱼ − 1]`` — so the
+    chain is ONE threshold stage over x with table ``t1[t2 − base1 − 1]``.
+    ``cⱼ ≤ 0`` always fires (sentinel INT32_MIN: every int32 x passes);
+    ``cⱼ > L1`` never fires (sentinel INT32_MAX: lowering guarantees
+    reachable codes stay strictly below it).  The composed table is sorted
+    before return — counts are permutation-invariant, so that is free.
+    """
+    t1 = np.sort(np.asarray(t1, np.int64), axis=-1)
+    t2 = np.asarray(t2, np.int64)
+    per_channel = t1.ndim == 2 or t2.ndim == 2
+    l1 = t1.shape[-1]
+    t1 = np.atleast_2d(t1)                        # (C1|1, L1)
+    c = np.atleast_2d(t2) - int(base1)            # (C2|1, L2)
+    channels = max(t1.shape[0], c.shape[0])
+    t1 = np.broadcast_to(t1, (channels, l1))
+    c = np.broadcast_to(c, (channels, c.shape[-1]))
+    idx = np.clip(c - 1, 0, l1 - 1)
+    comp = np.take_along_axis(t1, idx, axis=-1)
+    comp = np.where(c <= 0, np.int64(_INT32_MIN), comp)
+    comp = np.where(c > l1, np.int64(_INT32_MAX), comp)
+    comp = np.sort(comp, axis=-1).astype(np.int32)
+    return comp if per_channel else comp[0]
+
+
+def _requantize_plan(g: Graph, quant_node: Node) -> Optional[Dict[str, int]]:
+    """Attrs for folding a dequantize→quantize pair into ``requantize``,
+    or None when the pair must stay (off-grid scale, unannotated source, or
+    a source range where the float round-trip itself is inexact).  Shared
+    by the fusion pass and the ``integer_fused`` property check so the two
+    can never disagree about what is fusable."""
+    deq = g.producer(quant_node.inputs[0])
+    if deq is None or deq.op != "dequantize":
+        return None
+    f1 = _pow2_frac(float(deq.attrs["scale"]))
+    if f1 is None:
+        return None
+    src_spec = g.dtypes.get(deq.inputs[0])
+    if src_spec is None or src_spec.qmax > F32_EXACT_BOUND \
+            or src_spec.qmin < -F32_EXACT_BOUND:
+        return None                      # float view may round: keep the pair
+    bits = int(quant_node.attrs["bits"])
+    frac = int(quant_node.attrs["frac_bits"])
+    signed = bool(quant_node.attrs.get("signed", True))
+    shift = frac - f1
+    out_spec = FixedPointSpec(bits, frac, signed)
+    if shift > 0 and ((out_spec.qmax + 1) << shift >= _INT32_MAX
+                      or (-out_spec.qmin + 1) << shift >= _INT32_MAX):
+        return None                      # upshift could overflow int32
+    return {"shift": shift, "bits": bits, "frac_bits": frac,
+            "signed": signed}
+
+
+def _fusion_candidates(g: Graph) -> List[tuple]:
+    """Remaining fusion opportunities — () iff the graph is integer-fused."""
+    out = []
+    for node in g.nodes:
+        if node.op == "multithreshold_int":
+            prod = g.producer(node.inputs[0])
+            if prod is not None and prod.op in ("matmul_int",) + \
+                    _THRESHOLDED_OPS \
+                    and node.inputs[0] not in g.outputs \
+                    and len(g.consumers(node.inputs[0])) == 1 \
+                    and prod.inputs[-1] in g.initializers \
+                    and node.inputs[1] in g.initializers:
+                kind = "fuse_matmul" if prod.op == "matmul_int" \
+                    else "fuse_chain"
+                out.append((kind, node, prod))
+                continue
+        if node.op == "quantize" and _requantize_plan(g, node) is not None:
+            out.append(("requantize", node, g.producer(node.inputs[0])))
+        elif node.op in _THRESHOLDED_OPS \
+                and not node.attrs.get("t_sorted", False) \
+                and node.inputs[-1] in g.initializers:
+            out.append(("sort", node, None))
+    return out
+
+
+def _retire_initializer(g: Graph, name: str) -> None:
+    if name in g.initializers and not g.consumers(name):
+        del g.initializers[name]
+        g.dtypes.pop(name, None)
+
+
+def FuseIntegerDatapath(g: Graph) -> Graph:
+    """Collapse the lowered integer graph into fused end-to-end integer nodes.
+
+    Three rewrites, applied to fixpoint (each is exact, argued per helper):
+
+    * ``matmul_int → multithreshold_int`` becomes one ``mvau_int`` — the
+      thresholding happens in-register on the accumulator, never
+      materializing the wide intermediate;
+    * ``mvau_int|multithreshold_int → multithreshold_int`` chains collapse
+      by composing the two integer tables (:func:`_compose_thresholds`);
+    * interior ``dequantize → quantize`` pairs become a single integer
+      ``requantize`` (pure shift + round-half-even + clip) — activations
+      stay integer codes across what used to be a float round-trip.
+
+    Unsorted threshold tables are sorted in place (counts are
+    permutation-invariant), so every surviving table is binary-searchable.
+    """
+    g = g.copy()
+    g.toposort()
+    while True:
+        cands = _fusion_candidates(g)
+        if not cands:
+            break
+        kind, node, prod = cands[0]
+        if kind == "sort":
+            t_name = node.inputs[-1]
+            g.initializers[t_name] = np.sort(
+                np.asarray(g.initializers[t_name]), axis=-1)
+            node.attrs["t_sorted"] = True
+        elif kind == "requantize":
+            plan = _requantize_plan(g, node)
+            deq = prod
+            node.op = "requantize"
+            node.attrs = plan
+            g.set_input(node, 0, deq.inputs[0])
+            if not g.consumers(deq.outputs[0]) \
+                    and deq.outputs[0] not in g.outputs:
+                g.remove_node(deq)
+        elif kind == "fuse_matmul":
+            mid = node.inputs[0]
+            t_name = node.inputs[1]
+            out_dt = {o: g.dtypes.get(o) for o in node.outputs}
+            fused = Node("mvau_int",
+                         [prod.inputs[0], prod.inputs[1], t_name],
+                         list(node.outputs),
+                         {"out_base": node.attrs["out_base"],
+                          "out_bits": node.attrs["out_bits"],
+                          "out_frac_bits": node.attrs["out_frac_bits"],
+                          "out_signed": node.attrs["out_signed"],
+                          "t_sorted": node.attrs.get("t_sorted", False),
+                          "w_packed": prod.attrs["w_packed"],
+                          "w_bits": prod.attrs["w_bits"],
+                          "int8_ok": prod.attrs["int8_ok"],
+                          "acc_lo": prod.attrs["acc_lo"],
+                          "acc_hi": prod.attrs["acc_hi"],
+                          "acc_f32_exact": prod.attrs["acc_f32_exact"]})
+            pos = g.nodes.index(prod)
+            g.remove_node(node)
+            g.remove_node(prod)
+            g.insert_node(pos, fused)
+            g.dtypes.pop(mid, None)
+            g.dtypes.update(out_dt)
+        else:                                       # fuse_chain
+            inner = prod
+            t1_name = inner.inputs[-1]
+            t2_name = node.inputs[1]
+            mid = node.inputs[0]
+            composed = _compose_thresholds(
+                g.initializers[t1_name], inner.attrs["out_base"],
+                g.initializers[t2_name])
+            new_t = g.fresh_name(t1_name + "_fused")
+            g.initializers[new_t] = composed
+            g.dtypes[new_t] = g.dtypes.get(t1_name)
+            out_dt = {o: g.dtypes.get(o) for o in node.outputs}
+            g.set_input(inner, len(inner.inputs) - 1, new_t)
+            for key in ("out_base", "out_bits", "out_frac_bits",
+                        "out_signed"):
+                inner.attrs[key] = node.attrs[key]
+            inner.attrs["t_sorted"] = True
+            g.remove_node(node)
+            g.set_output(inner, 0, node.outputs[0])
+            g.dtypes.pop(mid, None)
+            g.dtypes.update(out_dt)
+            _retire_initializer(g, t1_name)
+            _retire_initializer(g, t2_name)
     g.toposort()
     return g

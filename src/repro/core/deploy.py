@@ -133,6 +133,13 @@ class DeployedModel:
     input_names: Tuple[str, ...]
     output_names: Tuple[str, ...]
     datapath: str = "f32"
+    # the resolved pass list that built self.graph — part of fingerprint(),
+    # so artifacts built with and without (say) fuse_integer_datapath can
+    # never alias in a persistent CompileCache
+    pass_names: Tuple[str, ...] = ()
+    # the Pallas interpret decision lower_graph() baked into ``apply``
+    # (None = auto: interpreted off-TPU) — dispatch_table() reports from it
+    interpret: Optional[bool] = None
     _jitted: Optional[Callable] = None
     _buckets: Optional[Tuple[int, ...]] = None
     _trace_count: int = 0
@@ -171,12 +178,23 @@ class DeployedModel:
         return self._buckets
 
     def fingerprint(self) -> str:
-        """Content digest of (graph structure + initializer bytes, datapath)
-        — the artifact half of a :class:`repro.ckpt.CompileCache` key."""
+        """Content digest of (graph structure + initializer bytes, datapath,
+        build pass set) — the artifact half of a
+        :class:`repro.ckpt.CompileCache` key.  The pass set matters even
+        though the post-pass graph is already hashed: it closes the
+        stale-cache hazard where a new pass (e.g. ``fuse_integer_datapath``)
+        happens to leave some graph unchanged structurally but changes what
+        the executors dispatch — two artifacts that were built differently
+        must never alias to the same persisted executable."""
         if self._fingerprint is None:
+            import hashlib
+
             from repro.ckpt.compile_cache import graph_fingerprint
 
-            self._fingerprint = f"{graph_fingerprint(self.graph)}-{self.datapath}"
+            pd = hashlib.sha256(
+                "|".join(self.pass_names).encode()).hexdigest()[:8]
+            self._fingerprint = (f"{graph_fingerprint(self.graph)}-"
+                                 f"{self.datapath}-{pd}")
         return self._fingerprint
 
     def _exec_key(self, shape: Tuple[int, ...], dtype) -> Tuple[Tuple[int, ...], str]:
@@ -291,6 +309,46 @@ class DeployedModel:
 
         return op_histogram(self.graph)
 
+    def dispatch_table(self) -> list:
+        """Per-node kernel dispatch: ``[{"tensor", "op", "kernel"}]``.
+
+        ``kernel`` comes from :func:`repro.kernels.ops.kernel_dispatch` —
+        the same decision function the deployed executors run — so a fusion
+        regression (a node silently falling back to ``ref-oracle``) is
+        visible here without a profiler."""
+        from repro.kernels import ops as kops
+
+        emulated = (kops.default_interpret() if self.interpret is None
+                    else self.interpret)
+        rows = []
+        for n in self.graph.nodes:
+            n_levels = None
+            if n.op == "mvau_int" and n.inputs[-1] in self.graph.initializers:
+                n_levels = int(np.asarray(
+                    self.graph.initializers[n.inputs[-1]]).shape[-1])
+            rows.append({"tensor": n.outputs[0], "op": n.op,
+                         "kernel": kops.kernel_dispatch(n, emulated,
+                                                        n_levels)})
+        return rows
+
+    def qdq_counts(self) -> Dict[str, int]:
+        """Surviving quantize/dequantize nodes and interior round-trip pairs.
+
+        ``interior_pairs`` counts quantize nodes fed directly by a
+        dequantize — exactly the structure ``fuse_integer_datapath`` folds
+        into ``requantize``.  A fused artifact must report 0 (asserted in
+        tests and in BENCH_pr7)."""
+        q = dq = pairs = 0
+        for n in self.graph.nodes:
+            if n.op == "quantize":
+                q += 1
+                p = self.graph.producer(n.inputs[0])
+                if p is not None and p.op == "dequantize":
+                    pairs += 1
+            elif n.op == "dequantize":
+                dq += 1
+        return {"quantize": q, "dequantize": dq, "interior_pairs": pairs}
+
     def weight_bytes(self) -> int:
         """Measured storage bytes across all baked-in constants (weight
         codes, threshold tables) — the HBM/BRAM footprint the paper's
@@ -329,6 +387,14 @@ class DeployedModel:
         head = (f"DeployedModel('{self.graph.name}', recipe='{self.recipe_name}', "
                 f"datapath='{self.datapath}', {len(self.graph.nodes)} nodes: "
                 f"{ops})\n  weight storage: {self.weight_bytes()} bytes")
+        qdq = self.qdq_counts()
+        head += (f"\n  quantize/dequantize surviving: {qdq['quantize']}/"
+                 f"{qdq['dequantize']} (interior pairs: "
+                 f"{qdq['interior_pairs']})")
+        head += "\n  kernel dispatch:"
+        for row in self.dispatch_table():
+            head += (f"\n    {row['tensor']:28s} {row['op']:20s} "
+                     f"-> {row['kernel']}")
         if sample_input is not None:
             t = self.throughput(sample_input, iters=iters)
             head += (f"\n  measured: {t['ms_per_call']:.2f} ms/call "
@@ -340,6 +406,7 @@ class DeployedModel:
 def compile(graph_or_model: Any, qcfg: Any = None, *,
             recipe: Union[str, R.BuildRecipe],
             datapath: str = "f32",
+            fuse: bool = True,
             sample_input: Optional[jax.Array] = None,
             verify_feeds: Optional[Dict[str, Any]] = None,
             interpret: Optional[bool] = None,
@@ -362,6 +429,13 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
         narrowest storage dtype and MVAUs run the integer compare-count
         datapath — bit-for-bit equal to ``"f32"`` on the grid, with the
         storage/bandwidth footprint of the paper's hardware.
+      fuse: with ``datapath="int"``, additionally run
+        ``fuse_integer_datapath``: matmul/threshold chains collapse into
+        fused ``mvau_int`` nodes, interior dequantize→quantize pairs fold
+        into integer ``requantize``, and threshold tables are sorted —
+        activations stay narrow integer codes end-to-end and the fast
+        integer kernels engage.  ``fuse=False`` keeps the unfused lowering
+        (the differential-testing baseline).  Ignored for ``"f32"``.
       sample_input: optional golden input for FINN-style per-pass IO
         verification (single-input graphs; use ``verify_feeds`` otherwise) —
         covers the integer lowering stage too.
@@ -394,11 +468,17 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
     passes = list(rec.passes)
     if datapath == "int":
         passes += ["infer_datatypes", "lower_to_integer_datapath"]
+        if fuse:
+            passes.append("fuse_integer_datapath")
     result = PassManager(rtol=rtol, atol=atol).run(
         graph, passes, verify_feeds=verify_feeds)
     hw = result.graph
+    from repro.core.passes import resolve_pass
+
     return DeployedModel(
         graph=hw, recipe_name=rec.name, trace=result.trace,
         apply=lower_graph(hw, interpret),
         input_names=tuple(hw.inputs), output_names=tuple(hw.outputs),
-        datapath=datapath)
+        datapath=datapath,
+        pass_names=tuple(resolve_pass(p).name for p in passes),
+        interpret=interpret)

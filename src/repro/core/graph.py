@@ -376,6 +376,33 @@ def _ex_mvau_int(node: Node, x: jax.Array, w: jax.Array,
     return ref.mvau_int(x, w, t, out_base=node.attrs.get("out_base", 0))
 
 
+def _ex_matmul_int(node: Node, x: jax.Array, w: jax.Array) -> jax.Array:
+    """Bare integer-code matmul (int32 accumulate) — the pre-fusion form."""
+    from repro.core import quant
+    from repro.kernels import ref
+
+    if node.attrs.get("w_packed"):
+        w = quant.unpack_int4(w)
+    return ref.matmul_int(x, w)
+
+
+def _ex_multithreshold_int(node: Node, x: jax.Array,
+                           t: jax.Array) -> jax.Array:
+    from repro.kernels import ref
+
+    return ref.multithreshold_int(x, t, out_base=node.attrs.get("out_base", 0))
+
+
+def _ex_requantize(node: Node, q: jax.Array) -> jax.Array:
+    """Exact integer regrid (shift + round-half-even + clip) — the fused
+    form of an interior dequantize→quantize pair."""
+    from repro.kernels import ref
+
+    return ref.requantize(q, node.attrs["shift"], node.attrs["bits"],
+                          node.attrs["frac_bits"],
+                          node.attrs.get("signed", True))
+
+
 def _ex_gap(node: Node, x: jax.Array) -> jax.Array:
     if jnp.issubdtype(x.dtype, jnp.integer):
         x = x.astype(jnp.int32)     # sub-int32 codes must not wrap in the sum
@@ -388,6 +415,9 @@ _EXECUTORS: Dict[str, Callable[..., jax.Array]] = {
     "multithreshold": _ex_multithreshold,
     "mvau": _ex_mvau,
     "mvau_int": _ex_mvau_int,
+    "matmul_int": _ex_matmul_int,
+    "multithreshold_int": _ex_multithreshold_int,
+    "requantize": _ex_requantize,
     "quantize": _ex_quantize,
     "dequantize": _ex_dequantize,
     "transpose": lambda node, x: jnp.transpose(x, node.attrs["perm"]),

@@ -100,6 +100,18 @@ def _prop_integer_datapath(g: Graph) -> bool:
     return not any(n.op in ("mvau", "multithreshold") for n in g.nodes)
 
 
+def _prop_integer_fused(g: Graph) -> bool:
+    """No fusable integer structure remains: every matmul_int→threshold and
+    threshold→threshold chain is collapsed, every foldable interior
+    dequantize→quantize pair is a single integer requantize, and every
+    surviving threshold table is sorted (binary-searchable).  Re-derived
+    from structure via the same candidate enumeration the fusion pass
+    drains, so the property and the pass cannot disagree."""
+    from repro.core import datatypes as _dt
+
+    return not _dt._fusion_candidates(g)
+
+
 PROPERTY_CHECKS: Dict[str, Callable[[Graph], bool]] = {
     "shape_inference": _prop_shape_inference,
     "trailing_axis_thresholds": _prop_trailing_axis_thresholds,
@@ -107,6 +119,7 @@ PROPERTY_CHECKS: Dict[str, Callable[[Graph], bool]] = {
     "hw_mappable": _prop_hw_mappable,
     "datatypes_annotated": _prop_datatypes_annotated,
     "integer_datapath": _prop_integer_datapath,
+    "integer_fused": _prop_integer_fused,
 }
 
 
@@ -381,3 +394,10 @@ register_pass(
                 "inputs, integer weight codes + thresholds, mvau_int)",
     requires=("datatypes_annotated",),
     establishes=("integer_datapath",))
+register_pass(
+    "fuse_integer_datapath", DT.FuseIntegerDatapath,
+    description="collapse matmul_int/threshold chains into fused mvau_int, "
+                "fold interior dequantize->quantize pairs into integer "
+                "requantize, sort threshold tables (narrow codes end-to-end)",
+    requires=("integer_datapath",),
+    establishes=("integer_fused",))

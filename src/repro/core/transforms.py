@@ -288,7 +288,8 @@ def FuseMatMulThresholdToMVAU(g: Graph) -> Graph:
     return g
 
 
-_HW_OPS = {"im2col", "mvau", "mvau_int", "quantize", "dequantize",
+_HW_OPS = {"im2col", "mvau", "mvau_int", "matmul_int", "multithreshold_int",
+           "requantize", "quantize", "dequantize",
            "transpose", "maxpool", "global_acc_pool",
            "mul", "add", "flatten", "matmul"}
 

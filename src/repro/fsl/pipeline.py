@@ -100,12 +100,18 @@ class FSLPipeline:
         flip = self.easy_augment
         traces = [0]
         execs = {}            # (shape, dtype name) -> AOT Compiled
+        # The int datapath's graph opens with its own quantize node, and
+        # quantize(fake_quant(x)) == quantize(x) on any grid — the eager
+        # fake_quant would be a redundant float round-trip before a fused
+        # integer program, so only the f32 emulation keeps it.
+        quant_in = datapath != "int"
 
         def _features(x: jax.Array) -> jax.Array:
             traces[0] += 1          # runs at trace time only (jit below)
-            f = dm.apply(fake_quant(x, act))[0]
+            f = dm.apply(fake_quant(x, act) if quant_in else x)[0]
             if flip:
-                f = f + dm.apply(fake_quant(x[:, :, ::-1], act))[0]
+                xf = x[:, :, ::-1]
+                f = f + dm.apply(fake_quant(xf, act) if quant_in else xf)[0]
             return f
 
         fused = jax.jit(_features)

@@ -67,6 +67,63 @@ def _mvau_kernel(x_ref, w_ref, t_ref, o_ref, acc_ref, *,
         o_ref[...] = y.astype(out_dtype)
 
 
+def _unpack_int4_block(w: jax.Array) -> jax.Array:
+    """In-register nibble unpack: packed (bk, bn//2) int8 → (bk, bn) codes.
+
+    Low nibble holds the even output channel (quant.pack_int4's layout).
+    Runs on the VPU inside the kernel, so packed weights go HBM→VMEM at
+    half the bytes and never exist unpacked outside the register file.
+    """
+    p = w.astype(jnp.int32) & 0xFF
+    lo = p & 0xF
+    hi = (p >> 4) & 0xF
+    lo = jnp.where(lo >= 8, lo - 16, lo)
+    hi = jnp.where(hi >= 8, hi - 16, hi)
+    return jnp.stack([lo, hi], axis=-1).reshape(w.shape[0], w.shape[1] * 2)
+
+
+def _mvau_int_kernel(x_ref, w_ref, t_ref, o_ref, acc_ref, *,
+                     n_k: int, n_levels: int, out_base: int, w_packed: bool,
+                     int8_mxu: bool):
+    """Integer MVAU writing int32 codes: the FINN datapath proper.
+
+    The int32 accumulator lives in VMEM scratch across the K grid axis; on
+    the last K step the sorted per-channel threshold table is applied
+    in-register (chunked compare-count — FINN's unary thresholding, exactly
+    what the HW MVAU does) and only the narrow output code is written back.
+    The wide accumulator never touches HBM.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]
+    w = w_ref[...]
+    if w_packed:
+        w = _unpack_int4_block(w)
+    if int8_mxu:
+        acc_ref[...] += jax.lax.dot_general(
+            x.astype(jnp.int8), w.astype(jnp.int8),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+    else:
+        acc_ref[...] += jax.lax.dot_general(
+            x.astype(jnp.int32), w.astype(jnp.int32),
+            (((1,), (0,)), ((), ())), preferred_element_type=jnp.int32)
+
+    @pl.when(k == n_k - 1)
+    def _activate():
+        acc = acc_ref[...]                      # (bm, bn) int32
+        counts = jnp.zeros(acc.shape, jnp.int32)
+        for l0 in range(0, n_levels, _THRESH_CHUNK):
+            l1 = min(l0 + _THRESH_CHUNK, n_levels)
+            t = t_ref[:, l0:l1]                 # (bn, chunk) int32
+            cmp = acc[:, :, None] >= t[None, :, :]
+            counts += jnp.sum(cmp.astype(jnp.int32), axis=-1)
+        o_ref[...] = out_base + counts
+
+
 def _pad_to(x: jax.Array, axis: int, mult: int, value=0) -> jax.Array:
     pad = (-x.shape[axis]) % mult
     if pad == 0:
@@ -127,6 +184,60 @@ def mvau_pallas(x: jax.Array, w: jax.Array, thresholds: jax.Array,
         scratch_shapes=[
             pltpu.VMEM((bm, bn), jnp.int32 if int_path else jnp.float32),
         ],
+        interpret=interpret,
+    )(xp, wp, tp)
+    return out[:m, :n]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("out_base", "w_packed", "bm", "bn", "bk", "interpret"))
+def mvau_int_pallas(x: jax.Array, w: jax.Array, thresholds_int: jax.Array,
+                    out_base: int = 0, w_packed: bool = False,
+                    bm: int = 128, bn: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """Fused integer MVAU: int32 code output, packed-int4 weight compute.
+
+    x: (M, K) integer codes; w: (K, N) dense codes or (K, N//2) packed int4
+    pairs (``w_packed=True`` — unpacked in-register, never materialized);
+    thresholds_int: (N, L) sorted int32.  Output: (M, N) int32 codes
+    ``out_base + Σᵢ 1[acc ≥ Tᵢ]``.  int8 operands take the MXU; wider codes
+    multiply on the VPU at int32.
+    """
+    if x.ndim != 2 or w.ndim != 2 or thresholds_int.ndim != 2:
+        raise ValueError(
+            "mvau_int_pallas expects 2-D x, w and (N, L) thresholds")
+    m, kdim = x.shape
+    n = w.shape[1] * (2 if w_packed else 1)
+    n_levels = thresholds_int.shape[1]
+    int8_mxu = x.dtype == jnp.int8 and w.dtype == jnp.int8 and not w_packed
+
+    if w_packed and bn % 2:
+        raise ValueError("packed weights need an even bn")
+    wn_block = bn // 2 if w_packed else bn
+    xp = _pad_to(_pad_to(x, 0, bm), 1, bk)
+    wp = _pad_to(_pad_to(w, 0, bk), 1, wn_block)
+    big = jnp.iinfo(jnp.int32).max
+    tp = _pad_to(thresholds_int, 0, bn, value=big)
+    mp, kp = xp.shape
+    np_ = wp.shape[1] * (2 if w_packed else 1)
+    grid = (mp // bm, np_ // bn, kp // bk)
+
+    kernel = functools.partial(
+        _mvau_int_kernel, n_k=grid[2], n_levels=n_levels,
+        out_base=int(out_base), w_packed=w_packed, int8_mxu=int8_mxu)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, wn_block), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn, n_levels), lambda i, j, k: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(xp, wp, tp)
     return out[:m, :n]

@@ -16,11 +16,11 @@ import jax.numpy as jnp
 from repro.core.quant import FixedPointSpec
 from repro.kernels import ref
 from repro.kernels.gap import gap_pallas
-from repro.kernels.mvau import mvau_pallas
+from repro.kernels.mvau import mvau_int_pallas, mvau_pallas
 from repro.kernels.qmatmul import qmatmul_pallas
 
 __all__ = ["mvau", "mvau_int", "qmatmul", "gap", "default_interpret",
-           "graph_op_impls"]
+           "graph_op_impls", "kernel_dispatch"]
 
 
 def default_interpret() -> bool:
@@ -52,17 +52,21 @@ def mvau(x: jax.Array, w: jax.Array, thresholds: jax.Array,
 
 
 def mvau_int(x_codes: jax.Array, w_codes: jax.Array, thresholds_int: jax.Array,
-             out_base: int = 0,
-             interpret: Optional[bool] = None) -> jax.Array:
-    """Integer MVAU: int8 codes × int8 codes, int32 thresholds (FINN path)."""
+             out_base: int = 0, interpret: Optional[bool] = None,
+             w_packed: bool = False) -> jax.Array:
+    """Integer MVAU: integer codes in, int32 codes out (FINN path).
+
+    ``w_packed`` feeds the (K, N//2) packed-int4 buffer straight to the
+    kernel, which unpacks nibbles in-register — the packed form the
+    lowering stores is also the compute form.
+    """
     interpret = default_interpret() if interpret is None else interpret
-    if x_codes.dtype != jnp.int8 or w_codes.dtype != jnp.int8:
-        raise ValueError("mvau_int requires int8 operand codes")
     x2, lead = _as_2d(x_codes)
-    t2 = _thresholds_2d(jnp.asarray(thresholds_int, jnp.int32), w_codes.shape[1])
-    y = mvau_pallas(x2, w_codes, t2, out_base=float(out_base),
-                    interpret=interpret)
-    return y.astype(jnp.int32).reshape(*lead, w_codes.shape[1])
+    n = w_codes.shape[1] * (2 if w_packed else 1)
+    t2 = _thresholds_2d(jnp.asarray(thresholds_int, jnp.int32), n)
+    y = mvau_int_pallas(x2, w_codes, t2, out_base=int(out_base),
+                        w_packed=w_packed, interpret=interpret)
+    return y.reshape(*lead, n)
 
 
 def qmatmul(x: jax.Array, w_codes: jax.Array, scale: jax.Array, bits: int = 8,
@@ -84,6 +88,52 @@ def gap(x: jax.Array, interpret: Optional[bool] = None) -> jax.Array:
 # ---------------------------------------------------------------------------
 # Graph-node lowering (core.deploy dispatches HW ops onto these kernels)
 # ---------------------------------------------------------------------------
+_PALLAS_MAX_LEVELS = 512  # beyond this the chunked in-kernel count loses to
+                          # the XLA searchsorted path on sorted tables
+
+
+def kernel_dispatch(node, emulated: bool,
+                    n_levels: Optional[int] = None) -> str:
+    """Which datapath a graph node executes on — the single decision point.
+
+    Both the deploy-time executors below and ``DeployedModel.report()``'s
+    per-node dispatch table call this, so what the report claims is by
+    construction what actually runs.  Labels:
+
+    * ``fused-pallas`` — compiled fused integer MVAU (int8 MXU / packed-int4
+      unpack in-register, thresholds applied on the accumulator in VMEM);
+    * ``int8-dot``   — XLA ``dot_general`` at int8 with int32 accumulation;
+    * ``f32-gemm``   — exact integer compute through the backend's f32 GEMM
+      (proof obligation ``acc_f32_exact`` discharged at lowering time);
+    * ``ref-oracle`` — naive exact integer fallback;
+    * ``pallas``     — compiled float Pallas kernel;
+    * ``fast-count`` / ``int-shift`` — vectorized integer threshold count /
+      requantize shift (same code on every backend);
+    * ``xla``        — plain XLA lowering (data movement, add, ...).
+    """
+    op = node.op
+    if op == "mvau_int":
+        if not emulated and (n_levels is None
+                             or n_levels <= _PALLAS_MAX_LEVELS):
+            return "fused-pallas"
+        if node.attrs.get("acc_f32_exact"):
+            return "f32-gemm"
+        return "ref-oracle"
+    if op == "matmul_int":
+        if not emulated and node.attrs.get("int8_ok"):
+            return "int8-dot"
+        if node.attrs.get("acc_f32_exact"):
+            return "f32-gemm"
+        return "ref-oracle"
+    if op == "multithreshold_int":
+        return "fast-count"
+    if op == "requantize":
+        return "int-shift"
+    if op in ("mvau", "global_acc_pool"):
+        return "ref-oracle" if emulated else "pallas"
+    return "xla"
+
+
 def graph_op_impls(interpret: Optional[bool] = None):
     """Executors for the HW graph ops, keyed by op name.
 
@@ -111,16 +161,48 @@ def graph_op_impls(interpret: Optional[bool] = None):
     def _mvau_int_node(node, x, w, t):
         from repro.core import quant as Q
 
+        base = node.attrs.get("out_base", 0)
+        disp = kernel_dispatch(node, emulated, n_levels=t.shape[-1])
+        if disp == "fused-pallas":
+            packed = bool(node.attrs.get("w_packed"))
+            if node.attrs.get("int8_ok"):
+                x = x.astype(jnp.int8)
+                if not packed:
+                    w = w.astype(jnp.int8)
+            return mvau_int(x, w, t, out_base=base, interpret=False,
+                            w_packed=packed)
         if node.attrs.get("w_packed"):
             w = Q.unpack_int4(w)
+        # exact fast path through the f32 GEMM when lowering proved the
+        # window, else exact int32 fallback — both bit-identical to the
+        # oracle, both with the fast threshold count
+        return ref.mvau_int_fast(
+            x, w, t, out_base=base,
+            acc_f32_exact=disp == "f32-gemm")
+
+    def _matmul_int_node(node, x, w):
+        from repro.core import quant as Q
+
+        disp = kernel_dispatch(node, emulated)
+        if node.attrs.get("w_packed"):
+            w = Q.unpack_int4(w)
+        if disp == "int8-dot":
+            return jax.lax.dot_general(
+                x.astype(jnp.int8), w.astype(jnp.int8),
+                (((x.ndim - 1,), (0,)), ((), ())),
+                preferred_element_type=jnp.int32)
+        return ref.matmul_int_fast(x, w,
+                                   acc_f32_exact=disp == "f32-gemm")
+
+    def _multithreshold_int_node(node, x, t):
         base = node.attrs.get("out_base", 0)
-        if not emulated and node.attrs.get("int8_ok"):
-            # both operands' codes fit int8: take the compiled Pallas int
-            # datapath (int8 MXU operands, int32 accumulate)
-            return mvau_int(x.astype(jnp.int8), w.astype(jnp.int8),
-                            t, out_base=base, interpret=False)
-        # wider codes (or CPU): XLA-native exact int32 oracle
-        return ref.mvau_int(x, w, t, out_base=base)
+        counts = ref.threshold_counts_fast(x.astype(jnp.int32), t)
+        return (base + counts).astype(jnp.int32)
+
+    def _requantize_node(node, q):
+        return ref.requantize(q, node.attrs["shift"], node.attrs["bits"],
+                              node.attrs["frac_bits"],
+                              node.attrs.get("signed", True))
 
     def _gap_node(node, x):
         axes = tuple(node.attrs["axes"])
@@ -131,4 +213,7 @@ def graph_op_impls(interpret: Optional[bool] = None):
         return jnp.sum(x, axis=axes)
 
     return {"mvau": _mvau_node, "mvau_int": _mvau_int_node,
+            "matmul_int": _matmul_int_node,
+            "multithreshold_int": _multithreshold_int_node,
+            "requantize": _requantize_node,
             "global_acc_pool": _gap_node}

@@ -42,6 +42,116 @@ def mvau_int(x_codes: jax.Array, w_codes: jax.Array, thresholds_int: jax.Array,
     return (out_base + counts).astype(jnp.int32)
 
 
+def matmul_int(x_codes: jax.Array, w_codes: jax.Array) -> jax.Array:
+    """Bare integer-code matmul: int32 accumulate, int32 out."""
+    return jnp.matmul(x_codes.astype(jnp.int32), w_codes.astype(jnp.int32))
+
+
+# --------------------------------------------------------------------------
+# Fast integer paths — bit-identical to the oracles above, chosen by the
+# deploy-time dispatch (kernels/ops.py) from static node attrs.  The oracles
+# stay deliberately naive; these carry the perf claim.
+# --------------------------------------------------------------------------
+def matmul_int_fast(x_codes: jax.Array, w_codes: jax.Array,
+                    acc_f32_exact: bool = False) -> jax.Array:
+    """Integer-code matmul through the backend's fast GEMM.
+
+    Integer matmuls have no BLAS/MXU path on most backends (an int32
+    ``jnp.matmul`` lowers to a naive loop on CPU — measured ~6× slower than
+    SGEMM).  When the lowering proved every partial sum fits ±2**24
+    (``acc_f32_exact``), computing the code matmul in f32 is EXACT: every
+    intermediate is an integer exactly representable in the f32 mantissa,
+    so the truncating cast back to int32 is the identity on the true sum.
+    """
+    if acc_f32_exact:
+        acc = jnp.matmul(x_codes.astype(jnp.float32),
+                         w_codes.astype(jnp.float32))
+        return acc.astype(jnp.int32)
+    return matmul_int(x_codes, w_codes)
+
+
+def _counts_unrolled(acc: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Per-level unrolled compare-count: L adds of a (..., N) compare.
+
+    For small L this beats both the rank-3 dense compare (which
+    materializes an (M, N, L) intermediate) and binary search (whose
+    per-element gathers don't vectorize) — measured ~6× over dense at
+    L = 15 on CPU.
+    """
+    counts = jnp.zeros(acc.shape, jnp.int32)
+    for level in range(thresholds.shape[-1]):
+        counts += (acc >= thresholds[..., level]).astype(jnp.int32)
+    return counts
+
+
+_UNROLL_MAX_LEVELS = 64   # above this, sorted tables binary-search instead
+
+
+def threshold_counts_fast(acc: jax.Array,
+                          thresholds_int: jax.Array) -> jax.Array:
+    """``Σᵢ 1[acc ≥ Tᵢ]`` picking the fastest exact strategy for L.
+
+    Small tables unroll (one vectorized compare per level); large sorted
+    tables fall through to :func:`quant.threshold_counts`, which
+    binary-searches concrete sorted tables — the fusion pass sorts every
+    table it emits, so deployed graphs always hit one of the fast forms.
+    """
+    if thresholds_int.shape[-1] < _UNROLL_MAX_LEVELS \
+            and not isinstance(thresholds_int, jax.core.Tracer):
+        return _counts_unrolled(acc, jnp.asarray(thresholds_int))
+    return quant.threshold_counts(acc, thresholds_int)
+
+
+def mvau_int_fast(x_codes: jax.Array, w_codes: jax.Array,
+                  thresholds_int: jax.Array, out_base: int = 0,
+                  acc_f32_exact: bool = False) -> jax.Array:
+    """Fused integer MVAU via the fast GEMM + fast threshold count.
+
+    Bit-for-bit equal to :func:`mvau_int` (asserted in tests); this is the
+    serving path for fused ``mvau_int`` nodes on backends without a
+    compiled Pallas datapath.
+    """
+    acc = matmul_int_fast(x_codes, w_codes, acc_f32_exact)
+    counts = threshold_counts_fast(acc, thresholds_int)
+    return (out_base + counts).astype(jnp.int32)
+
+
+def multithreshold_int(x_codes: jax.Array, thresholds_int: jax.Array,
+                       out_base: int = 0) -> jax.Array:
+    """Integer-domain MultiThreshold: ``base + Σᵢ 1[x ≥ Tᵢ]`` over int32
+    codes with an int32 threshold table (scales already folded in)."""
+    counts = quant.threshold_counts(x_codes.astype(jnp.int32), thresholds_int)
+    return (out_base + counts).astype(jnp.int32)
+
+
+def requantize(q: jax.Array, shift: int, bits: int, frac_bits: int,
+               signed: bool = True) -> jax.Array:
+    """Exact integer regrid: codes at scale ``2**-f1`` → codes at
+    ``2**-(f1+shift)``, round-half-even, saturating — bit-for-bit equal to
+    ``quantize(dequantize(q), spec)`` whenever the float round-trip is
+    itself exact (|q| ≤ 2**24, enforced by the fusion pass).
+
+    Downshifts split ``q = (q >> k) * 2**k + r`` and round the remainder to
+    even; upshifts pre-clip so the left shift can never overflow int32.
+    """
+    spec = quant.FixedPointSpec(bits, frac_bits, signed)
+    q = q.astype(jnp.int32)
+    if shift >= 0:
+        # largest/smallest codes whose shifted value is still in range; one
+        # beyond them saturates, so pre-clipping to ±1 outside is exact
+        hi_pre = spec.qmax >> shift
+        lo_pre = -((-spec.qmin) >> shift)
+        q = jnp.clip(q, lo_pre - 1, hi_pre + 1) << shift
+        return jnp.clip(q, spec.qmin, spec.qmax)
+    k = -shift
+    q2 = q >> k                          # arithmetic shift: floor(q / 2**k)
+    r = q - (q2 << k)                    # remainder in [0, 2**k)
+    half = 1 << (k - 1)
+    up = (r > half) | ((r == half) & ((q2 & 1) == 1))
+    q2 = q2 + up.astype(jnp.int32)
+    return jnp.clip(q2, spec.qmin, spec.qmax)
+
+
 def qmatmul(x: jax.Array, w_codes: jax.Array, scale: jax.Array,
             bits: int = 8) -> jax.Array:
     """Weight-only quantized matmul: ``x @ (codes * scale)``.

@@ -91,10 +91,13 @@ def test_graph_fingerprint_sees_initializer_bytes(deployed):
 
 
 def test_deployed_fingerprint_includes_datapath(served, deployed):
+    """Fingerprint format: <graph-hash>-<datapath>-<pass-set-digest> (the
+    pass digest is the PR 7 stale-cache fix — builds that differ only in
+    the fuse pass must never alias one persisted executable)."""
     _, params = served
     dm_f32 = repro.compile(params, QCFG, recipe="resnet9", datapath="f32")
-    assert deployed.fingerprint().endswith("-int")
-    assert dm_f32.fingerprint().endswith("-f32")
+    assert deployed.fingerprint().split("-")[1] == "int"
+    assert dm_f32.fingerprint().split("-")[1] == "f32"
     assert deployed.fingerprint() != dm_f32.fingerprint()
 
 

@@ -148,6 +148,58 @@ def test_int_datapath_structure(setup):
     assert np.asarray(dm.graph.initializers["c0_t"]).dtype == np.int32
 
 
+def test_fused_artifact_matches_unfused_and_is_qdq_free(setup):
+    """fuse=True (the default) stays bit-for-bit with the unfused build and
+    keeps activations integer end-to-end: zero interior dequantize→quantize
+    pairs survive in the fused artifact."""
+    params, _, x_q = setup
+    dm_fus = repro.compile(params, QCFG, recipe="resnet9", datapath="int")
+    dm_unf = repro.compile(params, QCFG, recipe="resnet9", datapath="int",
+                           fuse=False)
+    np.testing.assert_array_equal(np.asarray(dm_fus(x_q)),
+                                  np.asarray(dm_unf(x_q)))
+    qdq = dm_fus.qdq_counts()
+    assert qdq["interior_pairs"] == 0
+    assert qdq["quantize"] == 1 and qdq["dequantize"] == 1  # the boundary
+    assert "fuse_integer_datapath" in [r.name for r in dm_fus.trace.records]
+    assert "fuse_integer_datapath" not in [r.name for r in dm_unf.trace.records]
+
+
+def test_fingerprint_covers_the_pass_set(setup):
+    """The stale-cache bugfix: resnet9's lowering already emits fused
+    mvau_int with sorted tables, so fuse_integer_datapath leaves the GRAPH
+    unchanged — but the artifact fingerprints must still differ, or a
+    persistent CompileCache would alias builds whose executors dispatch
+    differently."""
+    from repro.ckpt.compile_cache import graph_fingerprint
+
+    params, _, _ = setup
+    dm_fus = repro.compile(params, QCFG, recipe="resnet9", datapath="int")
+    dm_unf = repro.compile(params, QCFG, recipe="resnet9", datapath="int",
+                           fuse=False)
+    assert graph_fingerprint(dm_fus.graph) == graph_fingerprint(dm_unf.graph)
+    assert dm_fus.fingerprint() != dm_unf.fingerprint()
+    assert dm_fus.pass_names != dm_unf.pass_names
+
+
+def test_dispatch_table_covers_every_node(setup):
+    """report()'s per-node kernel dispatch table names every node once, with
+    labels drawn from kernel_dispatch — off-TPU the integer MVAUs run the
+    exact f32-GEMM fast path (proof discharged at lowering), everything
+    data-movement is plain XLA."""
+    params, _, _ = setup
+    dm = repro.compile(params, QCFG, recipe="resnet9", datapath="int")
+    rows = dm.dispatch_table()
+    assert len(rows) == len(dm.graph.nodes)
+    by_op = {}
+    for r in rows:
+        by_op.setdefault(r["op"], set()).add(r["kernel"])
+    assert by_op["mvau_int"] == {"f32-gemm"}     # CPU backend: exact GEMM
+    assert by_op["im2col"] == {"xla"}
+    rep = dm.report()
+    assert "kernel dispatch" in rep and "interior pairs: 0" in rep
+
+
 def test_int_lowering_golden_io_verified(setup):
     """FINN-style per-pass verification covers the integer lowering stage:
     every pass, including lower_to_integer_datapath, is exactly IO-clean."""

@@ -265,3 +265,209 @@ def test_threshold_counts_searchsorted_matches_dense():
     np.testing.assert_array_equal(
         np.asarray(quant.threshold_counts(x, jnp.asarray(td))),
         np.asarray(jnp.sum(x[..., None] >= jnp.asarray(td), axis=-1)))
+
+
+# ---------------------------------------------------------------------------
+# Integer-datapath fusion (fuse_integer_datapath tentpole)
+# ---------------------------------------------------------------------------
+def _on_grid(rng, shape, spec, loc=0.0, scale=1.0):
+    x = rng.normal(loc, scale, shape).astype(np.float32)
+    return np.asarray(quant.dequantize(quant.quantize(jnp.asarray(x), spec),
+                                       spec))
+
+
+def _unfused_chain_graph(rng, k=36, n=8, levels=15):
+    """matmul → multithreshold → matmul → multithreshold, annotated inputs —
+    the raw material the fusion pass collapses into two mvau_int nodes."""
+    w1 = _on_grid(rng, (k, n), W6, scale=0.3)
+    w2 = _on_grid(rng, (n, n), W6, scale=0.3)
+    t1 = np.sort(rng.normal(0.0, 2.0, (n, levels)).astype(np.float32), axis=-1)
+    t2 = np.sort(rng.normal(0.0, 1.5, (levels,)).astype(np.float32), axis=-1)
+    g = Graph(
+        nodes=[Node("matmul", ["x", "w1"], ["mm1"]),
+               Node("multithreshold", ["mm1", "t1"], ["a1"],
+                    {"out_base": 0, "out_scale": A4.scale}),
+               Node("matmul", ["a1", "w2"], ["mm2"]),
+               Node("multithreshold", ["mm2", "t2"], ["y"],
+                    {"out_base": 0, "out_scale": A4.scale})],
+        inputs=["x"], outputs=["y"],
+        initializers={"w1": w1, "t1": t1, "w2": w2, "t2": t2},
+        name="unfused_chain")
+    g.dtypes.update({"x": A4, "w1": W6, "w2": W6})
+    x = _on_grid(rng, (5, k), A4, loc=0.5)
+    return g, x
+
+
+def test_fusion_collapses_unfused_chain_bit_exactly():
+    """The whole pipeline, golden-IO verified per pass: standalone
+    matmul/multithreshold chains become fused mvau_int nodes, every interior
+    float round-trip disappears, and execution is bit-for-bit unchanged."""
+    from repro.core.graph import execute
+
+    g, x = _unfused_chain_graph(np.random.default_rng(0))
+    want = np.asarray(execute(g, {"x": x})[0])
+    res = PassManager().run(
+        g, ["infer_datatypes", "lower_to_integer_datapath",
+            "fuse_integer_datapath"], verify_feeds={"x": x})
+    gf = res.graph
+    ops = [n.op for n in gf.nodes]
+    assert ops == ["quantize", "mvau_int", "mvau_int", "dequantize"], ops
+    np.testing.assert_array_equal(want, np.asarray(execute(gf, {"x": x})[0]))
+    # fixpoint: the pass left nothing fusable, so the integer_fused property
+    # holds and a second application is the identity
+    assert not DT._fusion_candidates(gf)
+    g2 = DT.FuseIntegerDatapath(gf)
+    assert [n.op for n in g2.nodes] == ops
+
+
+def test_fusion_composes_threshold_chains():
+    """multithreshold → multithreshold composes into ONE table (count
+    monotonicity: out1 >= t2 ⟺ x >= t1[t2 - base1 - 1]), checked bit-exactly
+    against the unfused interpreter over the whole input-code range."""
+    from repro.core.graph import execute
+
+    rng = np.random.default_rng(1)
+    ta = np.sort(rng.normal(0.5, 1.0, (7,)).astype(np.float32))
+    tb = np.sort(rng.normal(1.0, 1.0, (3,)).astype(np.float32))
+    g = Graph(
+        nodes=[Node("multithreshold", ["x", "ta"], ["a"],
+                    {"out_base": 0, "out_scale": 0.5}),
+               Node("multithreshold", ["a", "tb"], ["y"],
+                    {"out_base": 0, "out_scale": 1.0})],
+        inputs=["x"], outputs=["y"],
+        initializers={"ta": ta, "tb": tb}, name="mt_chain")
+    g.dtypes.update({"x": A4})
+    # EVERY representable input code, not a random sample
+    x = (np.arange(2 ** A4.total_bits, dtype=np.float32)
+         * A4.scale).reshape(-1, 1)
+    want = np.asarray(execute(g, {"x": x})[0])
+    res = PassManager().run(
+        g, ["infer_datatypes", "lower_to_integer_datapath",
+            "fuse_integer_datapath"], verify_feeds={"x": x})
+    ops = [n.op for n in res.graph.nodes]
+    assert ops.count("multithreshold_int") == 1, ops
+    np.testing.assert_array_equal(
+        want, np.asarray(execute(res.graph, {"x": x})[0]))
+
+
+def test_compose_thresholds_brute_force():
+    """_compose_thresholds == apply-t1-then-t2, for every int32 input in
+    range, random per-channel tables, including out-of-reach t2 entries
+    (sentinel rows) and duplicate thresholds."""
+    rng = np.random.default_rng(2)
+    for _ in range(20):
+        c, l1, l2 = rng.integers(1, 4), rng.integers(1, 9), rng.integers(1, 9)
+        t1 = np.sort(rng.integers(-6, 7, (c, l1)), axis=-1).astype(np.int32)
+        base1 = int(rng.integers(-3, 3))
+        # t2 deliberately wider than base1 + l1 reach → exercises sentinels
+        t2 = np.sort(rng.integers(base1 - 3, base1 + l1 + 4, (c, l2)),
+                     axis=-1).astype(np.int32)
+        tc = DT._compose_thresholds(t1, base1, t2)
+        x = np.arange(-10, 11, dtype=np.int32)[:, None]        # (X, 1)
+        mid = base1 + np.sum(x[:, :, None] >= t1[None], axis=-1)   # (X, C)
+        want = np.sum(mid[:, :, None] >= t2[None], axis=-1)
+        got = np.sum(x[:, :, None] >= tc[None], axis=-1)
+        np.testing.assert_array_equal(want, got)
+        # diff in int64: sentinel rows span the whole int32 range
+        assert np.all(np.diff(tc.astype(np.int64), axis=-1) >= 0), \
+            "composed table not sorted"
+
+
+def test_requantize_matches_float_roundtrip_exhaustively():
+    """requantize(q, shift, ...) == quantize(dequantize(q)) for EVERY int
+    code across up- and down-shifts and all sign/width combos — the exact
+    integer form of the interior dequantize→quantize pair the fusion pass
+    folds.  Round-half-even at downshift, saturation at upshift."""
+    from repro.kernels import ref
+
+    for f1 in range(0, 9):
+        spec_in = FixedPointSpec(16, f1, signed=True)
+        q = np.arange(max(spec_in.qmin, -5000), min(spec_in.qmax, 5000),
+                      dtype=np.int32)
+        for bits, f2, signed in [(4, 2, False), (6, 5, True), (8, 4, False),
+                                 (5, 0, True)]:
+            want = np.asarray(quant.quantize(
+                quant.dequantize(jnp.asarray(q), spec_in),
+                FixedPointSpec(bits, f2, signed)))
+            got = np.asarray(ref.requantize(jnp.asarray(q), f2 - f1, bits,
+                                            f2, signed))
+            np.testing.assert_array_equal(
+                want, got, err_msg=f"f1={f1} out=({bits},{f2},{signed})")
+
+
+def test_fusion_folds_interior_roundtrip_into_requantize():
+    """A dequantize→quantize interior pair (spec change, no compute between)
+    folds into a single integer requantize node, bit-exactly."""
+    from repro.core.graph import execute
+
+    rng = np.random.default_rng(3)
+    a8 = FixedPointSpec(8, 4, signed=False)
+    g = Graph(
+        nodes=[Node("quantize", ["x"], ["q1"], {"bits": 8, "frac_bits": 4,
+                                                "signed": False}),
+               Node("dequantize", ["q1"], ["d1"], {"scale": a8.scale}),
+               Node("quantize", ["d1"], ["q2"], {"bits": 4, "frac_bits": 2,
+                                                 "signed": False}),
+               Node("dequantize", ["q2"], ["y"],
+                    {"scale": FixedPointSpec(4, 2, signed=False).scale})],
+        inputs=["x"], outputs=["y"], initializers={}, name="qdq")
+    g.dtypes.update({"x": None})
+    x = rng.uniform(0.0, a8.max_value, (4, 6)).astype(np.float32)
+    want = np.asarray(execute(g, {"x": x})[0])
+    res = PassManager().run(g, ["infer_datatypes", "fuse_integer_datapath"],
+                            verify_feeds={"x": x})
+    ops = [n.op for n in res.graph.nodes]
+    assert ops == ["quantize", "requantize", "dequantize"], ops
+    np.testing.assert_array_equal(
+        want, np.asarray(execute(res.graph, {"x": x})[0]))
+
+
+def test_lowering_sorts_threshold_tables():
+    """mvau lowering canonicalizes tables ascending (count is permutation-
+    invariant) and stamps t_sorted — the searchsorted fast path's contract."""
+    rng = np.random.default_rng(4)
+    w = _on_grid(rng, (9, 4), W6, scale=0.3)
+    t = rng.normal(0.0, 2.0, (4, 15)).astype(np.float32)   # NOT sorted
+    g = Graph(nodes=[Node("mvau", ["x", "w", "t"], ["y"],
+                          {"out_base": 0, "out_scale": A4.scale})],
+              inputs=["x"], outputs=["y"],
+              initializers={"w": w, "t": t}, name="one_mvau")
+    g.dtypes.update({"x": A4, "w": W6})
+    res = PassManager().run(g, ["infer_datatypes",
+                                "lower_to_integer_datapath"])
+    node = next(n for n in res.graph.nodes if n.op == "mvau_int")
+    assert node.attrs["t_sorted"] is True
+    t_int = res.graph.initializers[node.inputs[2]]
+    assert np.all(np.diff(t_int, axis=-1) >= 0)
+
+
+def test_subset_sum_bounds_bound_every_prefix():
+    """_subset_sum_bounds bounds every accumulation-order intermediate, not
+    just the final dot product — brute-forced over all prefix sums of every
+    column under extreme inputs."""
+    rng = np.random.default_rng(5)
+    w = rng.integers(-8, 8, (6, 3)).astype(np.int64)
+    lo, hi = DT._subset_sum_bounds(w, 0, 15)
+    worst_hi = worst_lo = 0
+    for j in range(w.shape[1]):
+        for x in ([15 * (w[:, j] > 0), 15 * (w[:, j] < 0)]):
+            acc = np.cumsum(x * w[:, j])
+            worst_hi = max(worst_hi, acc.max(initial=0))
+            worst_lo = min(worst_lo, acc.min(initial=0))
+    assert lo <= worst_lo and hi >= worst_hi
+    # and for unsigned-positive weights it is tight
+    wpos = np.abs(w)
+    lo2, hi2 = DT._subset_sum_bounds(wpos, 0, 15)
+    assert lo2 == 0 and hi2 == 15 * wpos.sum(axis=0).max()
+
+
+def test_integer_fused_property_and_pass_registration():
+    """fuse_integer_datapath is registered requiring integer_datapath and
+    establishing integer_fused; running it out of order is a static
+    PassOrderError."""
+    meta = PASS_REGISTRY["fuse_integer_datapath"]
+    assert "integer_datapath" in meta.requires
+    assert "integer_fused" in meta.establishes
+    g, x = _unfused_chain_graph(np.random.default_rng(6))
+    with pytest.raises(PassOrderError):
+        PassManager().run(g, ["infer_datatypes", "fuse_integer_datapath"])

@@ -1,21 +1,24 @@
 """Differential fuzzing of the compiler stack (ISSUE 4 satellite): random
 small HW-mappable graphs — conv (im2col+MVAU), matmul, multithreshold and
 GlobalAccPool chains over random ``FixedPointSpec`` grids — must execute
-IDENTICALLY through all three engines:
+IDENTICALLY through all four engines:
 
     interpreter (graph.execute)
-      == compiled f32 artifact (repro.compile, datapath="f32")
-      == compiled int artifact (repro.compile, datapath="int")
+      == compiled f32 artifact   (repro.compile, datapath="f32")
+      == unfused int artifact    (datapath="int", fuse=False)
+      == fused int artifact      (datapath="int")  [fuse_integer_datapath]
 
 bit for bit.  This is the property the hand-written resnet9 tests check at
-one architecture; the generator here explores the space of graph shapes,
-bit-widths, threshold layouts (per-tensor and per-channel) and
-integer-domain frontiers (an unfused matmul forces a mid-graph dequantize)
-that no single fixed model covers.
+one architecture; the generator here explores the space of graph shapes
+(including odd spatial/channel dims that stress kernel tiling), bit-widths,
+threshold layouts (per-tensor and per-channel), standalone
+matmul→multithreshold chains (the fusion pass's raw material) and
+integer-domain frontiers.
 
-A seeded, always-on parametrized sweep runs in tier-1; when ``hypothesis``
-is installed, a property-based version (marked slow) drives the same
-generator through minimized counterexample search.
+A seeded, always-on parametrized sweep runs in tier-1; the nightly job runs
+a 150-seed extension (marked slow); when ``hypothesis`` is installed, a
+property-based version (also slow) drives the same generator through
+minimized counterexample search.
 """
 
 import numpy as np
@@ -62,20 +65,21 @@ def random_hw_graph(seed: int):
     """Build a random HW-mappable graph + an on-grid input batch.
 
     Chains 1–3 conv blocks (im2col → MVAU, optionally maxpool), sometimes
-    followed by a bare-matmul projection head — an integer-domain *frontier*
-    the lowering must dequantize across — and/or a GlobalAccPool tail.
+    followed by a bare-matmul projection head and/or a GlobalAccPool tail.
     With some probability the whole chain is instead generated *unfused*
-    (matmul → standalone multithreshold): those graphs exercise the
-    interpreter-vs-f32-artifact contract only, because the integer lowering
-    (by design — the ``integer_datapath`` property) refuses graphs where
-    float-emulated quantized compute would survive.
+    (matmul → standalone multithreshold): since the fused-datapath PR those
+    lower to ``matmul_int``/``multithreshold_int`` — and collapse back into
+    fused ``mvau_int`` under ``fuse_integer_datapath`` — so they exercise
+    the full interpreter == f32 == int-unfused == int-fused contract.  The
+    bare-matmul head lowers to ``matmul_int`` with the dequantize frontier
+    *after* it (its output never re-enters a threshold).
 
-    Returns ``(graph, x, int_ok)``; ``int_ok`` says the int datapath is
-    buildable for this graph.
+    Returns ``(graph, x, fused)``; ``fused`` says the chain was generated
+    pre-fused (mvau) rather than as standalone matmul → multithreshold.
     """
     rng = np.random.default_rng(seed)
     batch = int(rng.integers(1, 4))
-    img = int(rng.choice([4, 8]))
+    img = int(rng.choice([4, 5, 8]))    # 5: odd spatial extent → odd M tiles
     c0 = int(rng.integers(1, 4))
     in_spec = _rand_act_spec(rng)
     fused = bool(rng.random() < 0.75)       # else: standalone multithreshold
@@ -114,8 +118,8 @@ def random_hw_graph(seed: int):
             src, hw = f"b{b}_pool", hw // 2
 
     if fused and rng.random() < 0.3:
-        # bare-matmul projection head: annotated inputs but NOT lowerable —
-        # forces the mid-graph dequantize frontier in the int artifact
+        # bare-matmul projection head: lowers to matmul_int with the
+        # dequantize frontier after it (no threshold consumes its output)
         wspec = _rand_weight_spec(rng)
         w = np.asarray(fake_quant(
             rng.normal(size=(c_in, 4)).astype(np.float32), wspec))
@@ -137,24 +141,43 @@ def random_hw_graph(seed: int):
 
 
 def assert_differential(seed: int) -> None:
-    """interpreter == f32 artifact (== int artifact where buildable),
-    bit for bit."""
-    g, x, int_ok = random_hw_graph(seed)
+    """interpreter == f32 == int-unfused == int-fused, bit for bit, and the
+    fused artifact keeps activations integer end-to-end (zero interior
+    dequantize→quantize pairs)."""
+    g, x, fused = random_hw_graph(seed)
     ref = np.asarray(execute(g, {"x": x})[0])
     dm_f32 = repro.compile(g.copy(), recipe=_FUZZ_RECIPE, datapath="f32")
     np.testing.assert_array_equal(
         ref, np.asarray(dm_f32(x)),
         err_msg=f"seed {seed}: interpreter != f32 artifact")
-    if not int_ok:
-        return
-    dm_int = repro.compile(g.copy(), recipe=_FUZZ_RECIPE, datapath="int")
+    dm_unf = repro.compile(g.copy(), recipe=_FUZZ_RECIPE, datapath="int",
+                           fuse=False)
     np.testing.assert_array_equal(
-        ref, np.asarray(dm_int(x)),
-        err_msg=f"seed {seed}: interpreter != int artifact")
-    # the int build must actually have lowered the fused MVAUs — otherwise
-    # the comparison is vacuous float-vs-float
-    assert any(n.op == "mvau_int" for n in dm_int.graph.nodes), \
-        f"seed {seed}: int artifact contains no mvau_int node"
+        ref, np.asarray(dm_unf(x)),
+        err_msg=f"seed {seed}: interpreter != unfused int artifact")
+    dm_fus = repro.compile(g.copy(), recipe=_FUZZ_RECIPE, datapath="int")
+    np.testing.assert_array_equal(
+        ref, np.asarray(dm_fus(x)),
+        err_msg=f"seed {seed}: interpreter != fused int artifact")
+    # the int builds must actually have lowered the quantized compute —
+    # otherwise the comparison is vacuous float-vs-float
+    int_ops = {"mvau_int", "matmul_int", "multithreshold_int"}
+    assert any(n.op in int_ops for n in dm_unf.graph.nodes), \
+        f"seed {seed}: unfused int artifact has no integer compute node"
+    if not fused:
+        # standalone matmul → multithreshold chains lower unfused to the
+        # split pair; the fusion pass must collapse them into mvau_int
+        assert any(n.op == "multithreshold_int" for n in dm_unf.graph.nodes), \
+            f"seed {seed}: unfused artifact lost the standalone threshold"
+        assert not any(n.op == "multithreshold_int"
+                       for n in dm_fus.graph.nodes), \
+            f"seed {seed}: fusion left a standalone multithreshold_int"
+    assert any(n.op == "mvau_int" for n in dm_fus.graph.nodes), \
+        f"seed {seed}: fused int artifact contains no mvau_int node"
+    assert dm_fus.qdq_counts()["interior_pairs"] == 0, \
+        f"seed {seed}: fused artifact kept an interior dequantize→quantize"
+    assert dm_fus.fingerprint() != dm_unf.fingerprint(), \
+        f"seed {seed}: fused/unfused artifacts alias in the compile cache"
 
 
 # ---------------------------------------------------------------------------
@@ -167,18 +190,29 @@ def test_differential_seeded(seed):
 
 def test_generator_covers_the_interesting_shapes():
     """The fuzz corpus must include fused AND unfused chains, GAP and
-    dense-out tails, and the bare-matmul frontier — otherwise the sweep
-    silently stops covering a lowering path."""
+    dense-out tails, odd spatial extents, and the bare-matmul head —
+    otherwise the sweep silently stops covering a lowering path."""
     kinds = set()
-    frontier = 0
+    frontier = odd = 0
     for seed in range(32):
-        g, _, int_ok = random_hw_graph(seed)
+        g, x, fused = random_hw_graph(seed)
         ops = [n.op for n in g.nodes]
-        kinds.add(("mvau" if int_ok else "unfused",
+        kinds.add(("mvau" if fused else "unfused",
                    "gap" if "global_acc_pool" in ops else "dense_out"))
         frontier += int("proj_w" in g.initializers)
+        odd += int(x.shape[1] % 2 == 1)
     assert len(kinds) >= 3, f"degenerate corpus: {kinds}"
-    assert frontier >= 1, "no bare-matmul frontier graph in 32 seeds"
+    assert frontier >= 1, "no bare-matmul head graph in 32 seeds"
+    assert odd >= 1, "no odd spatial extent in 32 seeds"
+
+
+# ---------------------------------------------------------------------------
+# Nightly 150-seed extension (slow — CI nightly runs ``-m slow``)
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(8, 158))
+def test_differential_nightly(seed):
+    assert_differential(seed)
 
 
 # ---------------------------------------------------------------------------

@@ -62,6 +62,63 @@ def test_mvau_int_matches_ref(m, k, n):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("m,k,n,levels", [
+    (7, 36, 8, 15),      # odd M, K not a tile multiple
+    (16, 130, 129, 15),  # odd N → ragged last tile in both grid axes
+    (5, 64, 32, 255),    # 8-bit grid: chunked threshold loop
+])
+def test_mvau_int_fused_kernel_odd_shapes(m, k, n, levels):
+    """The fused integer MVAU kernel (accumulate in VMEM scratch, thresholds
+    applied in-register on the int32 accumulator) is bit-exact against the
+    pure oracle at ragged tile shapes, and so is the f32-exact GEMM fast
+    path the CPU backend serves from."""
+    x = RNG.integers(0, 16, size=(m, k)).astype(np.int32)
+    w = RNG.integers(-8, 8, size=(k, n)).astype(np.int32)
+    t = np.sort(RNG.integers(-500, 4000, size=(n, levels)),
+                axis=1).astype(np.int32)
+    want = np.asarray(ref.mvau_int(jnp.asarray(x), jnp.asarray(w),
+                                   jnp.asarray(t), out_base=-3))
+    got = np.asarray(ops.mvau_int(jnp.asarray(x), jnp.asarray(w),
+                                  jnp.asarray(t), out_base=-3,
+                                  interpret=True))
+    np.testing.assert_array_equal(want, got)
+    fast = np.asarray(ref.mvau_int_fast(jnp.asarray(x), jnp.asarray(w),
+                                        jnp.asarray(t), out_base=-3,
+                                        acc_f32_exact=True))
+    np.testing.assert_array_equal(want, fast)
+
+
+def test_mvau_int_packed_int4_in_kernel_unpack():
+    """The packed (K, N//2) int4 buffer the lowering stores is ALSO the
+    compute layout: the kernel unpacks nibbles in-register and matches the
+    unpacked oracle bit-for-bit."""
+    m, k, n = 6, 36, 32
+    x = RNG.integers(0, 16, size=(m, k)).astype(np.int32)
+    w = RNG.integers(-8, 8, size=(k, n)).astype(np.int32)
+    t = np.sort(RNG.integers(-500, 3000, size=(n, 15)), axis=1).astype(np.int32)
+    wp = np.asarray(quant.pack_int4(jnp.asarray(w)))
+    assert wp.shape == (k, n // 2)
+    want = np.asarray(ref.mvau_int(jnp.asarray(x), jnp.asarray(w),
+                                   jnp.asarray(t), out_base=-3))
+    got = np.asarray(ops.mvau_int(jnp.asarray(x), jnp.asarray(wp),
+                                  jnp.asarray(t), out_base=-3,
+                                  interpret=True, w_packed=True))
+    np.testing.assert_array_equal(want, got)
+
+
+def test_threshold_counts_fast_matches_dense():
+    """Both fast-count strategies — the unrolled per-level loop (L < 64) and
+    searchsorted (sorted L >= 64) — equal the dense compare-count."""
+    for levels in (15, 128):
+        t = np.sort(RNG.integers(-50, 400, size=(8, levels)),
+                    axis=1).astype(np.int32)
+        acc = RNG.integers(-100, 500, size=(3, 5, 8)).astype(np.int32)
+        fast = np.asarray(ref.threshold_counts_fast(jnp.asarray(acc),
+                                                    jnp.asarray(t)))
+        dense = np.sum(acc[..., None] >= t[None, None], axis=-1)
+        np.testing.assert_array_equal(fast, dense)
+
+
 def test_mvau_batched_rank3():
     x = _rand((2, 5, 48))
     w = _rand((48, 24))
