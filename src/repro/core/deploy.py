@@ -331,6 +331,16 @@ class DeployedModel:
                                                         n_levels)})
         return rows
 
+    def profile(self, example, *, xla: bool = True,
+                backend: Optional[str] = None) -> Dict[str, Any]:
+        """Per-node FLOPs/bytes/estimated-ms attribution for one batch
+        shape, cross-checked against XLA's ``cost_analysis()`` totals —
+        see :func:`repro.obs.costmodel.profile_deployed`.  The farm records
+        ``totals.est_ms`` into sweep points as ``modeled_ms``."""
+        from repro.obs.costmodel import profile_deployed
+
+        return profile_deployed(self, example, xla=xla, backend=backend)
+
     def qdq_counts(self) -> Dict[str, int]:
         """Surviving quantize/dequantize nodes and interior round-trip pairs.
 
@@ -410,7 +420,8 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
             sample_input: Optional[jax.Array] = None,
             verify_feeds: Optional[Dict[str, Any]] = None,
             interpret: Optional[bool] = None,
-            rtol: float = 1e-5, atol: float = 1e-6) -> DeployedModel:
+            rtol: float = 1e-5, atol: float = 1e-6,
+            tracer: Optional[Any] = None) -> DeployedModel:
     """Build a :class:`DeployedModel` from a graph or a native model object.
 
     Args:
@@ -441,6 +452,9 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
         covers the integer lowering stage too.
       interpret: force Pallas interpret mode (default: auto — interpreted
         off-TPU, compiled on TPU).
+      tracer: optional :class:`repro.obs.Tracer` for compiler telemetry
+        (per-pass spans); default is the process-global tracer, a no-op
+        until ``repro.obs.configure()`` attaches an exporter.
 
     Raises :class:`~repro.core.passes.PassOrderError` on mis-ordered
     recipes, :class:`~repro.core.passes.PassVerificationError` if a pass
@@ -470,7 +484,7 @@ def compile(graph_or_model: Any, qcfg: Any = None, *,
         passes += ["infer_datatypes", "lower_to_integer_datapath"]
         if fuse:
             passes.append("fuse_integer_datapath")
-    result = PassManager(rtol=rtol, atol=atol).run(
+    result = PassManager(rtol=rtol, atol=atol, tracer=tracer).run(
         graph, passes, verify_feeds=verify_feeds)
     hw = result.graph
     from repro.core.passes import resolve_pass

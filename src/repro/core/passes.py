@@ -283,9 +283,14 @@ class PassManager:
     paper's exact fixed-point grids the comparison is exact to ``atol``.
     """
 
-    def __init__(self, *, rtol: float = 1e-5, atol: float = 1e-6):
+    def __init__(self, *, rtol: float = 1e-5, atol: float = 1e-6,
+                 tracer: Optional[Any] = None):
         self.rtol = rtol
         self.atol = atol
+        if tracer is None:
+            from repro.obs import get_tracer
+            tracer = get_tracer()
+        self.tracer = tracer
 
     def validate(self, passes: Sequence[PassLike]) -> List[GraphPass]:
         """Static recipe check: a pass must not require a property that only
@@ -317,32 +322,57 @@ class PassManager:
         if verify_feeds is not None:
             golden = [np.asarray(o) for o in execute(graph, verify_feeds)]
         g = graph
-        for p in resolved:
-            before = op_histogram(g)
-            n_before = len(g.nodes)
-            t0 = time.perf_counter()
-            g = apply_pass(g, p)
-            dt = time.perf_counter() - t0
-            after = op_histogram(g)
-            delta = {op: after.get(op, 0) - before.get(op, 0)
-                     for op in set(before) | set(after)
-                     if after.get(op, 0) != before.get(op, 0)}
-            rec = PassRecord(p.name, n_before, len(g.nodes), delta, dt)
-            if golden is not None:
-                outs = [np.asarray(o) for o in execute(g, verify_feeds)]
-                err = max((float(np.max(np.abs(a - b))) if a.size else 0.0)
-                          for a, b in zip(outs, golden))
-                rec.max_abs_err = err
-                rec.verified = bool(
-                    all(np.allclose(a, b, rtol=self.rtol, atol=self.atol)
-                        for a, b in zip(outs, golden)))
-                if not rec.verified:
+        tr = self.tracer
+        # Compiler telemetry (repro.obs): one "compile.build" root span per
+        # build, one "compile.pass" child per pass — wall time, node/op
+        # deltas, and verification verdicts land on the same trace spine the
+        # serving requests use.  NULL span when tracing is disabled.
+        with tr.span("compile.build",
+                     attrs={"graph": graph.name,
+                            "n_passes": len(resolved),
+                            "verified": verify_feeds is not None}) as root:
+            for p in resolved:
+                before = op_histogram(g)
+                n_before = len(g.nodes)
+                t0 = time.perf_counter()
+                g = apply_pass(g, p)
+                t1 = time.perf_counter()
+                dt = t1 - t0
+                after = op_histogram(g)
+                delta = {op: after.get(op, 0) - before.get(op, 0)
+                         for op in set(before) | set(after)
+                         if after.get(op, 0) != before.get(op, 0)}
+                rec = PassRecord(p.name, n_before, len(g.nodes), delta, dt)
+                if golden is not None:
+                    outs = [np.asarray(o) for o in execute(g, verify_feeds)]
+                    err = max((float(np.max(np.abs(a - b))) if a.size else 0.0)
+                              for a, b in zip(outs, golden))
+                    rec.max_abs_err = err
+                    rec.verified = bool(
+                        all(np.allclose(a, b, rtol=self.rtol, atol=self.atol)
+                            for a, b in zip(outs, golden)))
+                if tr.enabled:
+                    tr.record(
+                        "compile.pass", t0, t1, trace=root.trace,
+                        parent=root.span_id,
+                        status=("ok" if rec.verified in (True, None)
+                                else "io-mismatch"),
+                        attrs={"pass": p.name,
+                               "nodes_before": n_before,
+                               "nodes_after": len(g.nodes),
+                               "op_delta": delta,
+                               "establishes": list(p.establishes),
+                               "verified": rec.verified,
+                               "max_abs_err": rec.max_abs_err})
+                if rec.verified is False:
                     trace.records.append(rec)
+                    root.set("failed_pass", p.name)
                     raise PassVerificationError(
                         f"pass '{p.name}' changed graph semantics: max abs "
                         f"output error {err:.3e} exceeds "
                         f"rtol={self.rtol}/atol={self.atol}\n{trace.report()}")
-            trace.records.append(rec)
+                trace.records.append(rec)
+            root.set("total_ms", trace.total_s * 1e3)
         return BuildResult(g, trace)
 
 

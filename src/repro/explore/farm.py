@@ -261,6 +261,12 @@ def publish_frontier(result: FarmResult, registry, *, datapath: str = "int",
                 "ms_per_batch": rec[f"{dp}_ms_per_batch"],
                 "point_seed": rec["point_seed"],
                 "probe_digest": rec["probe_digest"],
+                # modeled per-node cost attribution (repro.obs.costmodel):
+                # estimated hardware latency + the dominant node, carried
+                # into serving provenance so a served artifact explains its
+                # own cost profile (absent on records from pre-obs sweeps)
+                "modeled_ms": rec.get("modeled_ms"),
+                "cost_top": rec.get("cost_top"),
                 "cache_key": result.keys[i], "knee": i == knee,
             })
         names.append(name)

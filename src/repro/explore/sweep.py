@@ -171,6 +171,14 @@ def run_point(w_bits: int, a_bits: int, *, width: int = 8, steps: int = 120,
     with _BENCH_LOCK:
         t_f32 = dm_f32.throughput(probe_q, iters=bench_iters)
         t_int = dm_int.throughput(probe_q, iters=bench_iters)
+    # Modeled per-node cost attribution (repro.obs.costmodel) at the bench
+    # batch shape: `modeled_ms` ranks the frontier by estimated hardware
+    # latency and `cost_top` names the dominant node — per-point, without a
+    # profiler.  Excluded from DETERMINISTIC_KEYS: the roofline constants
+    # are backend-dependent.  xla=False keeps the sweep loop free of an
+    # extra AOT compile per point.
+    prof = dm_int.profile(probe_q, xla=False)
+    top = max(prof["nodes"], key=lambda r: r["est_ms"], default=None)
     record = {
         "w_bits": w_bits, "a_bits": a_bits,
         "weight_spec": qcfg.weight.describe(),
@@ -182,6 +190,12 @@ def run_point(w_bits: int, a_bits: int, *, width: int = 8, steps: int = 120,
         "int_ms_per_batch": t_int["ms_per_call"],
         "int_batches_per_s": t_int["calls_per_s"],
         "bitexact_int_vs_f32": bitexact,
+        "modeled_ms": prof["totals"]["est_ms"],
+        "modeled_flops": prof["totals"]["flops"],
+        "modeled_bytes": prof["totals"]["bytes"],
+        "cost_top": ({"tensor": top["tensor"], "op": top["op"],
+                      "kernel": top["kernel"], "share": top["share"]}
+                     if top else None),
         "final_pretrain_loss": float(out["losses"][-1]),
         "seed": int(seed), "point_seed": int(ps),
         "probe_digest": hashlib.sha256(probe_feats.tobytes()).hexdigest(),

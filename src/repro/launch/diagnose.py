@@ -1,83 +1,11 @@
-import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Deprecated shim — moved to :mod:`repro.obs.diagnose`.
 
-"""Per-cell collective/dot breakdown (the §Perf profiling view).
-
-  python -m repro.launch.diagnose --arch qwen3-14b --shape train_4k \
-      --variant nofsdp [--multi-pod]
+Note the behaviour change: the obs version sets
+``--xla_force_host_platform_device_count=512`` inside ``main()`` (via
+``setdefault``) instead of unconditionally at import time.
 """
 
-import argparse
-
-from repro.launch import hlo_analysis as H
-
-
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--shape", required=True)
-    ap.add_argument("--variant", default="")
-    ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--dump-hlo", default="")
-    args = ap.parse_args()
-
-    # rebuild the exact cell (no artifact cache: we need the HLO text)
-    import repro.launch.dryrun as D
-    import json
-
-    res, text = lower_and_text(args.arch, args.shape, args.multi_pod,
-                               args.variant)
-    if args.dump_hlo:
-        with open(args.dump_hlo, "w") as f:
-            f.write(text)
-    print(f"== collectives (per-device bytes x multiplicity) ==")
-    for r in H.top_collectives(text, 14):
-        print(f"{r['total']/1e9:10.2f} GB {r['op']:18s} mult={r['mult']:8.0f} "
-              f"visit={r['per_visit']/1e6:9.2f}MB n={r['count']:3d} "
-              f"{r['comp'][:58]}")
-    print(f"== dots ==")
-    for r in H.top_dots(text, 8):
-        print(f"{r['total']/1e12:10.2f} TF mult={r['mult']:8.0f} "
-              f"visit={r['per_visit']/1e9:9.2f}GF {r['comp'][:58]}")
-
-
-def lower_and_text(arch, shape, multi_pod, variant):
-    """lower_cell, but returning the HLO text too."""
-    import repro.launch.dryrun as D
-
-    # monkey-patch-free: replicate the tail of lower_cell
-    import jax
-    res = None
-    orig_as_text = None
-    captured = {}
-
-    import jax.stages
-
-    class _Tap:
-        pass
-
-    # simplest: call lower_cell but re-parse inside by re-running; instead we
-    # inline: reuse lower_cell's return AND recompile? lower_cell discards
-    # text, so rebuild here via its own internals:
-    from repro.launch.dryrun import lower_cell  # noqa
-    import repro.launch.dryrun as dr
-
-    # Temporarily hook hlo_analysis.analyze to capture the text it receives.
-    orig = dr.hlo_analysis.analyze
-
-    def tap(text):
-        captured["text"] = text
-        return orig(text)
-
-    dr.hlo_analysis.analyze = tap
-    try:
-        res = lower_cell(arch, shape, multi_pod, variant)
-    finally:
-        dr.hlo_analysis.analyze = orig
-    if "text" not in captured:
-        raise SystemExit(f"cell did not reach analysis: {res}")
-    return res, captured["text"]
-
+from repro.obs.diagnose import lower_and_text, main  # noqa: F401
 
 if __name__ == "__main__":
     main()

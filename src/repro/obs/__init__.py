@@ -1,0 +1,53 @@
+"""repro.obs — the unified observability spine.
+
+Everything the repo measures flows through here:
+
+* :class:`Tracer` / exporters (:mod:`repro.obs.tracer`,
+  :mod:`repro.obs.export`) — hierarchical spans with one trace ID per serve
+  request and per compile, exported as JSONL events.
+* :class:`MetricsRegistry` (:mod:`repro.obs.metrics`) — counters / gauges /
+  histograms under one lock, rendered as Prometheus text exposition
+  (``ServeMetrics`` is rebuilt on top of this).
+* :mod:`repro.obs.costmodel` — per-node FLOPs/bytes/estimated-ms
+  attribution behind ``DeployedModel.profile()``, recorded into farm sweep
+  points.
+* :mod:`repro.obs.hlo` / :mod:`repro.obs.diagnose` — compiled-HLO
+  analysis (moved from ``repro.launch``; shims remain there).
+* ``python -m repro.obs.summarize trace.jsonl`` — render a trace file into
+  queue-wait / padding-overhead / exec breakdowns.
+
+A process-global default tracer (disabled until :func:`configure` attaches
+an exporter) lets components instrument unconditionally with near-zero cost
+when nobody is looking.
+"""
+
+from repro.obs.export import JsonlExporter, RingBufferExporter, read_jsonl
+from repro.obs.metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                               escape_label_value)
+from repro.obs.tracer import EVENT_FIELDS, NULL_SPAN, Span, Tracer
+
+__all__ = [
+    "EVENT_FIELDS", "NULL_SPAN", "Span", "Tracer",
+    "JsonlExporter", "RingBufferExporter", "read_jsonl",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "escape_label_value",
+    "configure", "get_tracer",
+]
+
+# Disabled until configure() attaches an exporter; components that default
+# to this tracer pay one attribute read per instrumentation site.
+_default_tracer = Tracer(exporter=None, enabled=False)
+
+
+def get_tracer() -> Tracer:
+    """The process-global default tracer."""
+    return _default_tracer
+
+
+def configure(exporter=None, enabled: bool = True) -> Tracer:
+    """Attach an exporter to (and enable/disable) the global tracer.
+
+    Returns the tracer so call sites can do
+    ``tr = obs.configure(RingBufferExporter())``.
+    """
+    return _default_tracer.configure(exporter=exporter, enabled=enabled)

@@ -1,0 +1,78 @@
+"""Per-cell collective/dot breakdown (the §Perf profiling view).
+
+  python -m repro.obs.diagnose --arch qwen3-14b --shape train_4k \
+      --variant nofsdp [--multi-pod]
+
+Moved from ``repro.launch.diagnose`` (shim remains).  The 512-host-device
+XLA flag is set inside :func:`main` — importing this module no longer
+mutates the process environment.
+"""
+
+import argparse
+import os
+import sys
+
+from repro.obs import hlo as H
+
+
+def main():
+    # Must land before jax initialises its backends; harmless if the caller
+    # already chose their own flags.
+    os.environ.setdefault(
+        "XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dump-hlo", default="")
+    args = ap.parse_args()
+
+    res, text = lower_and_text(args.arch, args.shape, args.multi_pod,
+                               args.variant)
+    del res
+    if args.dump_hlo:
+        with open(args.dump_hlo, "w") as f:
+            f.write(text)
+    out = sys.stdout.write
+    out("== collectives (per-device bytes x multiplicity) ==\n")
+    for r in H.top_collectives(text, 14):
+        out(f"{r['total']/1e9:10.2f} GB {r['op']:18s} "
+            f"mult={r['mult']:8.0f} visit={r['per_visit']/1e6:9.2f}MB "
+            f"n={r['count']:3d} {r['comp'][:58]}\n")
+    out("== dots ==\n")
+    for r in H.top_dots(text, 8):
+        out(f"{r['total']/1e12:10.2f} TF mult={r['mult']:8.0f} "
+            f"visit={r['per_visit']/1e9:9.2f}GF {r['comp'][:58]}\n")
+
+
+def lower_and_text(arch, shape, multi_pod, variant):
+    """``lower_cell``, but returning the HLO text too.
+
+    ``lower_cell`` discards the text after analysis, so we hook the
+    ``analyze`` entry point it calls (resolved as a module attribute at call
+    time) to capture the text on its way through.
+    """
+    import repro.launch.dryrun as dr
+    from repro.launch.dryrun import lower_cell
+
+    captured = {}
+    orig = dr.hlo_analysis.analyze
+
+    def tap(text):
+        captured["text"] = text
+        return orig(text)
+
+    dr.hlo_analysis.analyze = tap
+    try:
+        res = lower_cell(arch, shape, multi_pod, variant)
+    finally:
+        dr.hlo_analysis.analyze = orig
+    if "text" not in captured:
+        raise SystemExit(f"cell did not reach analysis: {res}")
+    return res, captured["text"]
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,286 @@
+"""Trip-count-aware analysis of SPMD-partitioned HLO text.
+
+(Lives in ``repro.obs`` as the compiled-side half of cost attribution;
+``repro.launch.hlo_analysis`` re-exports everything for old imports.)
+
+``compiled.cost_analysis()`` counts a ``while`` body ONCE regardless of trip
+count (verified in this container: a 10-iteration scan of a 128³ matmul
+reports 1× the matmul flops).  Every interesting workload here is scan-built
+(layers × microbatches × attention chunks), so we parse the optimized HLO
+ourselves:
+
+1. split the module into computations; build a per-computation symbol table
+   (instruction name → result type) since operand types are not annotated
+   inline;
+2. per computation, sum dot/convolution FLOPs (2 · |result| · K, with K from
+   the lhs operand's recorded shape and ``lhs_contracting_dims``) and
+   collective payload bytes (result shapes — per-device, post-partition);
+3. build the call graph (while bodies, fusions, calls, conditionals);
+4. read each while's trip count from the max ``s32 constant(N)`` in its
+   condition computation (scan lowers its bound to exactly this form);
+5. propagate multiplicities from ENTRY down the loop nest and total.
+
+Elementwise FLOPs are ignored (dot-dominated workloads — documented in
+EXPERIMENTS.md §Roofline).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+                "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1,
+                "pred": 1, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_HEADER_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*.+\{\s*$")
+# tuple types may embed /*index=N*/ comments, so match lazily to the first
+# ')' (HLO tuple types never contain nested parens).
+_INSTR_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*"
+                       r"(\(.*?\)|\S+)\s+([a-z][a-z0-9\-]*)\(")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+
+
+def _parse_shape(s: str) -> Tuple[Optional[str], List[int]]:
+    m = _SHAPE_RE.match(s)
+    if not m:
+        return None, []
+    dt, dims = m.groups()
+    return dt, [int(d) for d in dims.split(",")] if dims else []
+
+
+def _shape_bytes(s: str) -> float:
+    total = 0.0
+    for m in _SHAPE_RE.finditer(s):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _numel(type_str: str) -> float:
+    _, dims = _parse_shape(type_str)
+    n = 1
+    for d in dims:
+        n *= d
+    return float(n)
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    dot_flops: float = 0.0
+    coll_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: {c: 0.0 for c in _COLLECTIVES})
+    coll_counts: Dict[str, int] = dataclasses.field(
+        default_factory=lambda: {c: 0 for c in _COLLECTIVES})
+    calls: List[str] = dataclasses.field(default_factory=list)
+    # (body, condition, known_trip_count-or-None)
+    while_bodies: List[Tuple[str, str, Optional[int]]] = dataclasses.field(
+        default_factory=list)
+    lt_constants: List[int] = dataclasses.field(default_factory=list)
+
+
+def parse_module(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    symtab: Dict[str, str] = {}
+
+    for raw in text.splitlines():
+        line = raw.strip()
+        if cur is None:
+            m = _HEADER_RE.match(line)
+            if m and " = " not in line.split("->")[0]:
+                cur = Computation(m.group(2))
+                symtab = {}
+                if m.group(1):
+                    entry = cur.name
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        iname, itype, op = im.groups()
+        symtab[iname] = itype
+
+        if op in ("dot", "convolution"):
+            cur.dot_flops += _dot_flops(line, itype, op, symtab)
+        base_op = op[:-6] if op.endswith("-start") else op
+        if base_op in _COLLECTIVES and not op.endswith("-done"):
+            cur.coll_bytes[base_op] += _shape_bytes(itype)
+            cur.coll_counts[base_op] += 1
+        if op == "while":
+            tm = _TRIP_RE.search(line)
+            known = int(tm.group(1)) if tm else None
+            wm = re.search(r"condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)", line)
+            if wm:
+                cur.while_bodies.append((wm.group(2), wm.group(1), known))
+            else:
+                wm2 = re.search(r"body=%?([\w.\-]+),\s*condition=%?([\w.\-]+)",
+                                line)
+                if wm2:
+                    cur.while_bodies.append((wm2.group(1), wm2.group(2), known))
+        for pat in (r"calls=%?([\w.\-]+)", r"to_apply=%?([\w.\-]+)"):
+            for cm in re.finditer(pat, line):
+                cur.calls.append(cm.group(1))
+        bm = re.search(r"branch_computations=\{([^}]*)\}", line)
+        if bm:
+            for callee in bm.group(1).split(","):
+                cur.calls.append(callee.strip().lstrip("%"))
+        km = re.match(r"^(?:ROOT\s+)?%[\w.\-]+\s*=\s*s32\[\]\s*constant\((\d+)\)",
+                      line)
+        if km:
+            cur.lt_constants.append(int(km.group(1)))
+    if entry:
+        comps["__entry__"] = comps[entry]
+    return comps
+
+
+def _dot_flops(line: str, result_type: str, op: str,
+               symtab: Dict[str, str]) -> float:
+    res_n = _numel(result_type)
+    ops = re.search(rf"{op}\(\s*%([\w.\-]+),\s*%([\w.\-]+)", line)
+    if op == "dot":
+        cm = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", line)
+        if not ops or not cm:
+            return 2.0 * res_n
+        lhs_type = symtab.get(ops.group(1), "")
+        _, lhs_dims = _parse_shape(lhs_type)
+        k = 1
+        for idx in cm.group(1).split(","):
+            if idx and int(idx) < len(lhs_dims):
+                k *= lhs_dims[int(idx)]
+        return 2.0 * res_n * k
+    # convolution
+    if ops:
+        _, ker = _parse_shape(symtab.get(ops.group(2), ""))
+        k = 1
+        for d in ker[:-1]:
+            k *= d
+        return 2.0 * res_n * k
+    return 2.0 * res_n
+
+
+def trip_count(cond: Computation) -> int:
+    """Scan conditions compare the induction var against a constant bound;
+    take the max s32 constant in the condition computation."""
+    return max(cond.lt_constants, default=1) or 1
+
+
+def analyze(text: str) -> Dict[str, object]:
+    comps = parse_module(text)
+    if "__entry__" not in comps:
+        return {"dot_flops": 0.0, "collective_bytes": {}, "parse_error": True}
+
+    totals_flops = 0.0
+    totals_coll = {c: 0.0 for c in _COLLECTIVES}
+    totals_cnt = {c: 0.0 for c in _COLLECTIVES}
+    stack: List[str] = []
+
+    def walk(name: str, mult: float):
+        nonlocal totals_flops
+        c = comps.get(name)
+        if c is None or name in stack:
+            return
+        stack.append(name)
+        totals_flops += mult * c.dot_flops
+        for op in _COLLECTIVES:
+            totals_coll[op] += mult * c.coll_bytes[op]
+            totals_cnt[op] += mult * c.coll_counts[op]
+        for body, cond, known in c.while_bodies:
+            n = known if known is not None \
+                else trip_count(comps.get(cond, Computation("?")))
+            walk(body, mult * n)
+        for callee in c.calls:
+            walk(callee, mult)
+        stack.pop()
+
+    walk("__entry__", 1.0)
+    return {
+        "dot_flops": totals_flops,
+        "collective_bytes": totals_coll,
+        "collective_counts": totals_cnt,
+    }
+
+
+def top_collectives(text: str, k: int = 20):
+    """Ranked list of (computation, op, per-visit bytes, multiplicity,
+    total bytes) — the diagnosis view for §Perf."""
+    comps = parse_module(text)
+    if "__entry__" not in comps:
+        return []
+    mults: Dict[str, float] = {}
+    stack: List[str] = []
+
+    def walk(name: str, mult: float):
+        c = comps.get(name)
+        if c is None or name in stack:
+            return
+        stack.append(name)
+        mults[name] = mults.get(name, 0.0) + mult
+        for body, cond, known in c.while_bodies:
+            n = known if known is not None \
+                else trip_count(comps.get(cond, Computation("?")))
+            walk(body, mult * n)
+        for callee in c.calls:
+            walk(callee, mult)
+        stack.pop()
+
+    walk("__entry__", 1.0)
+    rows = []
+    for name, mult in mults.items():
+        c = comps[name]
+        for op in _COLLECTIVES:
+            if c.coll_bytes[op]:
+                rows.append({"comp": name, "op": op,
+                             "per_visit": c.coll_bytes[op],
+                             "count": c.coll_counts[op],
+                             "mult": mult,
+                             "total": c.coll_bytes[op] * mult})
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:k]
+
+
+def top_dots(text: str, k: int = 15):
+    """Ranked dot contributors (computation, per-visit flops, mult, total)."""
+    comps = parse_module(text)
+    if "__entry__" not in comps:
+        return []
+    mults: Dict[str, float] = {}
+    stack: List[str] = []
+
+    def walk(name: str, mult: float):
+        c = comps.get(name)
+        if c is None or name in stack:
+            return
+        stack.append(name)
+        mults[name] = mults.get(name, 0.0) + mult
+        for body, cond, known in c.while_bodies:
+            n = known if known is not None \
+                else trip_count(comps.get(cond, Computation("?")))
+            walk(body, mult * n)
+        for callee in c.calls:
+            walk(callee, mult)
+        stack.pop()
+
+    walk("__entry__", 1.0)
+    rows = [{"comp": n, "per_visit": comps[n].dot_flops, "mult": m,
+             "total": comps[n].dot_flops * m}
+            for n, m in mults.items() if comps[n].dot_flops]
+    rows.sort(key=lambda r: -r["total"])
+    return rows[:k]

@@ -32,8 +32,10 @@ adds routing, not state.
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Dict, Hashable, List, Optional, Sequence
 
+from repro.obs import get_tracer
 from repro.serve.cluster.sharded import ShardedNCMHead, ShardedStore
 from repro.serve.cluster.tenancy import TenantRegistry
 from repro.serve.engine import ServeEngine, ServeOverload, TenantOverQuota
@@ -62,14 +64,20 @@ class ServeCluster:
                  tenant_quota: Optional[float] = None,
                  buckets: Optional[Sequence[int]] = None,
                  compile_cache: Optional[Any] = None,
+                 tracer: Optional[Any] = None,
                  start: bool = True):
         if replicas < 1:
             raise ValueError(f"need at least one replica, got {replicas}")
         self.registry = registry
         self.compile_cache = compile_cache
+        # One tracer for the whole cluster: the trace ID is minted HERE and
+        # handed into whichever replica admits the request, so routing
+        # (home replica, failovers) and the engine lifecycle share a trace.
+        self.tracer = tracer if tracer is not None else get_tracer()
         self._engine_kw = dict(max_batch=max_batch, max_queue=max_queue,
                                batch_wait_ms=batch_wait_ms,
-                               tenant_quota=tenant_quota, buckets=buckets)
+                               tenant_quota=tenant_quota, buckets=buckets,
+                               tracer=self.tracer)
         self._lock = threading.Lock()
         self._rr = 0
         self._home: Dict[Hashable, int] = {}
@@ -146,23 +154,47 @@ class ServeCluster:
 
     def _submit(self, kind: str, tenant: Hashable, x, class_id,
                 artifact: Optional[str], timeout: Optional[float]):
+        tr = self.tracer
+        t0 = time.perf_counter()
+        trace = tr.new_trace()           # ONE trace ID across route + serve
         name = self.registry.resolve(tenant, artifact)
+        engines = self._pick(tenant)
         last: Optional[Exception] = None
-        for eng in self._pick(tenant):
+        failovers = 0
+
+        def route_span(replica: int, status: str) -> None:
+            if tr.enabled:
+                tr.record("cluster.route", t0, time.perf_counter(),
+                          trace=trace,
+                          parent=ServeEngine._root_span(trace),
+                          status=status,
+                          attrs={"tenant": tenant, "artifact": name,
+                                 "replica": replica,
+                                 "failovers": failovers})
+
+        for i, eng in enumerate(engines):
             try:
                 if kind == "register":
-                    return eng.submit_register(class_id, x, artifact=name,
-                                               timeout=timeout, tenant=tenant)
-                return eng.submit_classify(x, artifact=name, timeout=timeout,
-                                           tenant=tenant)
+                    fut = eng.submit_register(class_id, x, artifact=name,
+                                              timeout=timeout, tenant=tenant,
+                                              trace=trace)
+                else:
+                    fut = eng.submit_classify(x, artifact=name,
+                                              timeout=timeout, tenant=tenant,
+                                              trace=trace)
+                route_span(i, "ok")
+                return fut
             except TenantOverQuota:
                 # quota is per-tenant POLICY, not replica capacity — spilling
                 # an over-quota tenant onto its neighbours' home replicas
                 # would hand it exactly the blast radius quotas exist to
                 # remove.  The home replica's rejection is authoritative.
+                route_span(i, "rejected:over_quota")
                 raise
             except ServeOverload as e:
                 last = e  # replica CAPACITY is routable: try the next one
+                failovers += 1
+        route_span(len(engines) - 1, "rejected:overload")
         raise last if last is not None else ServeOverload("no replicas")
 
     def submit_register(self, tenant: Hashable, class_id: Hashable, x,

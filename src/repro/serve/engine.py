@@ -39,6 +39,7 @@ from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.core.deploy import normalize_buckets, pow2_buckets
+from repro.obs import get_tracer
 from repro.serve.bucketing import pad_to_bucket
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ArtifactRegistry
@@ -77,6 +78,14 @@ class _Request:
     future: Future
     t_submit: float
     tenant: Optional[Hashable] = None
+    # request-lifecycle tracing (repro.obs): one trace ID per request plus
+    # the perf_counter timestamps the worker turns into post-hoc spans —
+    # admission (t_submit→t_enq), queue (t_enq→t_deq), coalesce
+    # (t_deq→exec), exec, respond (t_exec1→fulfil)
+    trace: str = ""
+    t_enq: float = 0.0
+    t_deq: float = 0.0
+    t_exec1: float = 0.0
 
     @property
     def n(self) -> int:
@@ -92,8 +101,14 @@ class ServeEngine:
                  buckets: Optional[Sequence[int]] = None,
                  metrics_window: int = 10_000,
                  tenant_quota: Optional[float] = None,
+                 tracer: Optional[Any] = None,
                  start: bool = True):
         self.registry = registry
+        # Request tracing (repro.obs): defaults to the process-global
+        # tracer, which is a no-op until obs.configure() attaches an
+        # exporter — every hot-path site guards on tracer.enabled, so the
+        # disabled cost is one attribute read per site plus the trace ID.
+        self.tracer = tracer if tracer is not None else get_tracer()
         self.max_batch = int(max_batch)
         self.buckets = (normalize_buckets(buckets) if buckets
                         else pow2_buckets(self.max_batch))
@@ -194,20 +209,32 @@ class ServeEngine:
     def submit_register(self, class_id: Hashable, x,
                         artifact: Optional[str] = None,
                         timeout: Optional[float] = None,
-                        tenant: Optional[Hashable] = None) -> Future:
+                        tenant: Optional[Hashable] = None,
+                        trace: Optional[str] = None) -> Future:
         """Queue support images (k, H, W, C) for online registration of
         ``class_id``.  Future resolves to the class's new shot count."""
-        return self._submit("register", x, class_id, artifact, timeout, tenant)
+        return self._submit("register", x, class_id, artifact, timeout,
+                            tenant, trace)
 
     def submit_classify(self, x, artifact: Optional[str] = None,
                         timeout: Optional[float] = None,
-                        tenant: Optional[Hashable] = None) -> Future:
+                        tenant: Optional[Hashable] = None,
+                        trace: Optional[str] = None) -> Future:
         """Queue query images (n, H, W, C).  Future resolves to a
         :class:`ClassifyResult`."""
-        return self._submit("classify", x, None, artifact, timeout, tenant)
+        return self._submit("classify", x, None, artifact, timeout, tenant,
+                            trace)
+
+    @staticmethod
+    def _root_span(trace: str) -> str:
+        """Deterministic root-span ID for a trace — children emitted from
+        the worker thread can parent onto it before the root itself is
+        exported at fulfil time."""
+        return trace + "-00"
 
     def _submit(self, kind, x, class_id, artifact, timeout,
-                tenant=None) -> Future:
+                tenant=None, trace=None) -> Future:
+        t_sub = time.perf_counter()
         x = np.asarray(x, np.float32)
         if x.ndim == 3:
             x = x[None]
@@ -216,16 +243,35 @@ class ServeEngine:
         if x.shape[0] > self.max_batch:
             raise ValueError(f"request of {x.shape[0]} samples exceeds "
                              f"max_batch={self.max_batch}; split it")
+        tr = self.tracer
+        # the ID is the ONE tracing allocation the disabled path keeps: it
+        # rides error messages and upstream (cluster) propagation
+        trace = trace or tr.new_trace()
         if self._stop.is_set():
             # a stopped engine has no drain — admitting would hang the
             # future forever.  (Submitting BEFORE the first start() is
             # allowed: the queue holds until the worker comes up.)
             self.metrics.record_rejected(tenant)
+            if tr.enabled:
+                tr.record("serve.request", t_sub, time.perf_counter(),
+                          trace=trace, span_id=self._root_span(trace),
+                          status="rejected:stopped",
+                          attrs={"tenant": tenant, "kind": kind})
             raise ServeOverload("engine is stopped; call start() first")
-        self._admit_tenant(tenant)
-        req = _Request(kind, x, class_id, artifact, Future(),
-                       time.perf_counter(), tenant)
         try:
+            self._admit_tenant(tenant)
+        except TenantOverQuota:
+            if tr.enabled:
+                tr.record("serve.request", t_sub, time.perf_counter(),
+                          trace=trace, span_id=self._root_span(trace),
+                          status="rejected:over_quota",
+                          attrs={"tenant": tenant, "kind": kind})
+            raise
+        req = _Request(kind, x, class_id, artifact, Future(), t_sub, tenant,
+                       trace=trace)
+        req.future.trace_id = trace        # client-side trace handle
+        req.t_enq = time.perf_counter()    # before put: the worker may
+        try:                               # dequeue it immediately
             if timeout is None:
                 self._queue.put_nowait(req)
             else:
@@ -233,9 +279,19 @@ class ServeEngine:
         except queue.Full:
             self._release_tenant(tenant)
             self.metrics.record_rejected(tenant)
+            if tr.enabled:
+                tr.record("serve.request", t_sub, time.perf_counter(),
+                          trace=trace, span_id=self._root_span(trace),
+                          status="rejected:queue_full",
+                          attrs={"tenant": tenant, "kind": kind})
             raise ServeOverload(
                 f"admission queue full ({self._queue.maxsize}); "
                 f"{self.metrics.completed} served so far") from None
+        if tr.enabled:
+            tr.record("serve.admission", t_sub, req.t_enq, trace=trace,
+                      parent=self._root_span(trace),
+                      attrs={"tenant": tenant, "kind": kind, "n": req.n,
+                             "artifact": artifact})
         self.metrics.observe_queue_depth(self._queue.qsize())
         return req.future
 
@@ -279,17 +335,41 @@ class ServeEngine:
         future was cancelled mid-batch has still updated the store.)"""
         if req.future.set_running_or_notify_cancel():
             req.future.set_result(value)
-            self.metrics.record_request(time.perf_counter() - req.t_submit,
+            t_now = time.perf_counter()
+            self.metrics.record_request(t_now - req.t_submit,
                                         tenant=req.tenant)
+            self._close_trace(req, t_now, "ok")
         else:
             self.metrics.record_cancelled()
+            self._close_trace(req, time.perf_counter(), "cancelled")
 
     def _fail(self, req: _Request, exc: Exception) -> None:
         if req.future.set_running_or_notify_cancel():
             req.future.set_exception(exc)
             self.metrics.record_request(0.0, ok=False, tenant=req.tenant)
+            self._close_trace(req, time.perf_counter(),
+                              f"error:{type(exc).__name__}")
         else:
             self.metrics.record_cancelled()
+            self._close_trace(req, time.perf_counter(), "cancelled")
+
+    def _close_trace(self, req: _Request, t_now: float, status: str) -> None:
+        """Emit the respond child and the request root span (the root's ID
+        is deterministic, so the earlier admission/queue/exec children
+        already parent onto it)."""
+        tr = self.tracer
+        if not (tr.enabled and req.trace):
+            return
+        root = req.trace + "-00"
+        evs = []
+        if req.t_exec1:
+            evs.append(("serve.respond", req.t_exec1, t_now, req.trace,
+                        root, None, None, None))
+        evs.append(("serve.request", req.t_submit, t_now, req.trace,
+                    None, root, status,
+                    {"tenant": req.tenant, "kind": req.kind,
+                     "n": req.n, "artifact": req.artifact}))
+        tr.record_many(evs)
 
     def _run(self) -> None:
         while True:
@@ -312,6 +392,7 @@ class ServeEngine:
         while first is None:
             try:
                 first = self._queue.get(timeout=0.05)
+                first.t_deq = time.perf_counter()
                 self._release_tenant(first.tenant)
             except queue.Empty:
                 if self._stop.is_set():
@@ -324,6 +405,7 @@ class ServeEngine:
             try:
                 nxt = self._queue.get_nowait() if rem <= 0 else \
                     self._queue.get(timeout=rem)
+                nxt.t_deq = time.perf_counter()
                 self._release_tenant(nxt.tenant)
             except queue.Empty:
                 break
@@ -362,16 +444,44 @@ class ServeEngine:
 
     def _run_group(self, pairs: List[Tuple[Any, _Request]]) -> None:
         reqs = [r for _, r in pairs]
+        t_g0 = time.perf_counter()
         try:
             x = np.concatenate([r.x for r in reqs], axis=0) \
                 if len(reqs) > 1 else reqs[0].x
             padded, n_real, bucket = pad_to_bucket(x, self.buckets)
+            t_x0 = time.perf_counter()
             feats = np.asarray(pairs[0][0].feats(padded))[:n_real]
+            t_x1 = time.perf_counter()
             self.metrics.record_batch(n_real, bucket)
         except Exception as e:                        # noqa: BLE001
             for r in reqs:
                 self._fail(r, e)
             return
+        for r in reqs:
+            r.t_exec1 = t_x1
+        tr = self.tracer
+        if tr.enabled:
+            # one batch-scope span on its own trace (the padding-overhead
+            # view), plus queue/coalesce/exec children on each request's
+            # trace — all post-hoc from timestamps the worker already
+            # holds, pushed in ONE record_many call so the per-event cost
+            # stays a tight loop instead of 3 tracer calls per request
+            evs = [("serve.batch", t_g0, t_x1, tr.new_trace("batch"),
+                    None, None, None,
+                    {"n_real": n_real, "bucket": bucket,
+                     "padded": bucket - n_real, "requests": len(reqs),
+                     "artifact": pairs[0][0].name})]
+            for art, r in pairs:
+                root = r.trace + "-00"
+                evs.append(("serve.queue", r.t_enq, r.t_deq, r.trace,
+                            root, None, None, None))
+                evs.append(("serve.coalesce", r.t_deq, t_x0, r.trace,
+                            root, None, None, None))
+                evs.append(("serve.exec", t_x0, t_x1, r.trace, root,
+                            None, None,
+                            {"bucket": bucket, "n_real": n_real,
+                             "artifact": art.name, "tenant": r.tenant}))
+            tr.record_many(evs)
         # Strict arrival order, but consecutive classifies on the SAME
         # artifact between two of its registers see the SAME store state —
         # classify them as ONE run (one NCM head call per run, not per

@@ -1,10 +1,17 @@
 """Serving metrics — per-request latency percentiles and steady-state
 throughput, the numbers the paper's Table III becomes under load.
 
-A :class:`ServeMetrics` is shared between the engine's worker thread and
-callers of :meth:`snapshot`; all mutation happens under one lock and the
-latency reservoir is bounded, so a soak run can push millions of requests
-without the metrics object growing with them.
+Rebuilt on :class:`repro.obs.metrics.MetricsRegistry`: every counter, gauge
+and histogram lives in one registry behind ONE shared re-entrant lock, and
+the latency reservoirs take the same lock — so a :meth:`snapshot` is a
+consistent cut (no more reading a request count from before a batch and a
+latency list from after it), and :meth:`prometheus` renders the whole
+registry in text exposition format for scraping.
+
+The latency *percentiles* come from bounded exact reservoirs (deques), not
+histogram buckets — a soak can push millions of requests without the
+object growing, and p99 stays exact over the window.  The histogram feeds
+the Prometheus view only.
 """
 
 from __future__ import annotations
@@ -12,9 +19,15 @@ from __future__ import annotations
 import threading
 import time
 from collections import deque
-from typing import Dict, Optional
+from typing import Dict
+
+from repro.obs.metrics import MetricsRegistry
 
 __all__ = ["ServeMetrics", "percentile"]
+
+# latency histogram bounds in ms (Prometheus exposition only; percentiles
+# are exact from the reservoir)
+_LAT_BUCKETS_MS = (0.5, 1, 2.5, 5, 10, 25, 50, 100, 250, 500, 1000, 5000)
 
 
 def percentile(sorted_vals, p: float) -> float:
@@ -27,60 +40,123 @@ def percentile(sorted_vals, p: float) -> float:
 
 
 class ServeMetrics:
-    """Counters + bounded latency reservoir for one :class:`ServeEngine`."""
+    """Counters + bounded latency reservoir for one :class:`ServeEngine`.
+
+    All state sits behind ``self._lock`` — an RLock shared with the
+    embedded :class:`MetricsRegistry`, so registry updates nested inside a
+    locked section never deadlock and every read path (``snapshot``,
+    ``tenant_snapshot``, the public counter properties) sees one consistent
+    world.
+    """
 
     def __init__(self, window: int = 10_000):
-        self._lock = threading.Lock()
+        self._lock = threading.RLock()
         self._window = window
         self._lat = deque(maxlen=window)       # seconds, completed requests
         self._t0 = time.perf_counter()
-        self.completed = 0
-        self.rejected = 0
-        self.over_quota = 0
-        self.failed = 0
-        self.cancelled = 0
-        self.batches = 0
-        self.batched_samples = 0               # real samples through backbone
-        self.padded_samples = 0                # wasted rows from bucketing
-        self.max_queue_depth = 0
-        # per-tenant accounting: counters + a bounded latency reservoir per
-        # tenant, so the noisy-neighbor benchmark can read a victim's p99
-        # straight off the shared metrics object
+        self.registry = MetricsRegistry(lock=self._lock)
+        reg = self.registry
+        self._c_completed = reg.counter(
+            "repro_serve_completed_total", "requests served OK")
+        self._c_failed = reg.counter(
+            "repro_serve_failed_total", "requests failed with an exception")
+        self._c_cancelled = reg.counter(
+            "repro_serve_cancelled_total", "futures cancelled while queued")
+        self._c_rejected = reg.counter(
+            "repro_serve_rejected_total", "admission rejections")
+        self._c_over_quota = reg.counter(
+            "repro_serve_over_quota_total", "per-tenant quota rejections")
+        self._c_batches = reg.counter(
+            "repro_serve_batches_total", "coalesced backbone batches")
+        self._c_real = reg.counter(
+            "repro_serve_batched_samples_total",
+            "real samples through the backbone")
+        self._c_padded = reg.counter(
+            "repro_serve_padded_samples_total",
+            "wasted rows from bucket padding")
+        self._g_depth = reg.gauge(
+            "repro_serve_queue_depth_max", "admission queue high-water mark")
+        self._h_lat = reg.histogram(
+            "repro_serve_latency_ms", "request latency, submit to fulfil",
+            buckets=_LAT_BUCKETS_MS)
+        self._c_compile = reg.counter(
+            "repro_serve_compile_total", "warmup executable builds",
+            labelnames=("cached",))
+        self._c_compile_s = reg.counter(
+            "repro_serve_compile_seconds_total", "warmup wall-clock",
+            labelnames=("cached",))
+        self._c_tenant = reg.counter(
+            "repro_serve_tenant_requests_total", "per-tenant outcomes",
+            labelnames=("tenant", "status"))
+        # per-tenant exact latency reservoirs (noisy-neighbor p99s)
         self._tenants: Dict = {}
-        # cold-start accounting (DeployedModel.warmup reports here): list of
-        # (artifact, bucket, seconds, cached) — bounded implicitly by the
-        # finite bucket/artifact set
-        self._compiles = []
+
+    # -- public counter views (kept as the pre-registry attribute API) ------
+    @property
+    def completed(self) -> int:
+        return int(self._c_completed.total())
+
+    @property
+    def rejected(self) -> int:
+        return int(self._c_rejected.total())
+
+    @property
+    def over_quota(self) -> int:
+        return int(self._c_over_quota.total())
+
+    @property
+    def failed(self) -> int:
+        return int(self._c_failed.total())
+
+    @property
+    def cancelled(self) -> int:
+        return int(self._c_cancelled.total())
+
+    @property
+    def batches(self) -> int:
+        return int(self._c_batches.total())
+
+    @property
+    def batched_samples(self) -> int:
+        return int(self._c_real.total())
+
+    @property
+    def padded_samples(self) -> int:
+        return int(self._c_padded.total())
+
+    @property
+    def max_queue_depth(self) -> int:
+        return int(self._g_depth.value())
 
     def _tenant(self, tenant):
         t = self._tenants.get(tenant)
         if t is None:
-            t = {"completed": 0, "rejected": 0, "over_quota": 0,
-                 "failed": 0, "lat": deque(maxlen=self._window)}
+            t = {"lat": deque(maxlen=self._window)}
             self._tenants[tenant] = t
         return t
 
+    # -- recording ----------------------------------------------------------
     def record_request(self, latency_s: float, ok: bool = True,
                        tenant=None) -> None:
         with self._lock:
             if ok:
-                self.completed += 1
+                self._c_completed.inc()
                 self._lat.append(latency_s)
+                self._h_lat.observe(latency_s * 1e3)
             else:
-                self.failed += 1
+                self._c_failed.inc()
             if tenant is not None:
+                self._c_tenant.inc(tenant=str(tenant),
+                                   status="completed" if ok else "failed")
                 t = self._tenant(tenant)
                 if ok:
-                    t["completed"] += 1
                     t["lat"].append(latency_s)
-                else:
-                    t["failed"] += 1
 
     def record_batch(self, n_real: int, bucket: int) -> None:
         with self._lock:
-            self.batches += 1
-            self.batched_samples += n_real
-            self.padded_samples += bucket - n_real
+            self._c_batches.inc()
+            self._c_real.inc(n_real)
+            self._c_padded.inc(bucket - n_real)
 
     def record_rejected(self, tenant=None, over_quota: bool = False) -> None:
         """An admission rejection; ``over_quota=True`` marks a per-tenant
@@ -88,14 +164,15 @@ class ServeMetrics:
         queue (``ServeOverload``) — the isolation benchmark asserts a noisy
         tenant's rejections are ALL the former."""
         with self._lock:
-            self.rejected += 1
+            self._c_rejected.inc()
             if over_quota:
-                self.over_quota += 1
+                self._c_over_quota.inc()
             if tenant is not None:
-                t = self._tenant(tenant)
-                t["rejected"] += 1
+                self._tenant(tenant)       # visible in tenant_snapshot
+                self._c_tenant.inc(tenant=str(tenant), status="rejected")
                 if over_quota:
-                    t["over_quota"] += 1
+                    self._c_tenant.inc(tenant=str(tenant),
+                                       status="over_quota")
 
     def record_compile(self, artifact: str, bucket: int, seconds: float,
                        cached: bool = False) -> None:
@@ -103,20 +180,40 @@ class ServeMetrics:
         cold-start cost, ``cached=True`` when a persistent CompileCache
         restored the executable instead of compiling it."""
         with self._lock:
-            self._compiles.append((artifact, int(bucket), float(seconds),
-                                   bool(cached)))
+            key = "true" if cached else "false"
+            self._c_compile.inc(cached=key)
+            self._c_compile_s.inc(float(seconds), cached=key)
 
+    def record_cancelled(self) -> None:
+        """Client cancelled the future while the request was queued."""
+        with self._lock:
+            self._c_cancelled.inc()
+
+    def observe_queue_depth(self, depth: int) -> None:
+        with self._lock:
+            self._g_depth.max(depth)
+
+    def reset_clock(self) -> None:
+        """Restart the throughput window (e.g. right after warmup) without
+        dropping rejection/failure counters."""
+        with self._lock:
+            self._t0 = time.perf_counter()
+            self._c_completed.reset()
+            self._lat.clear()
+            for t in self._tenants.values():
+                t["lat"].clear()
+
+    # -- reading ------------------------------------------------------------
     def compile_snapshot(self) -> Dict[str, float]:
         """Cold-start cost: total warmup seconds, per-bucket event count,
         and how many of those were cache restores vs fresh compiles."""
         with self._lock:
-            events = list(self._compiles)
-        return {
-            "compile_events": float(len(events)),
-            "compile_s": float(sum(e[2] for e in events)),
-            "compile_cached": float(sum(1 for e in events if e[3])),
-            "compile_fresh_s": float(sum(e[2] for e in events if not e[3])),
-        }
+            return {
+                "compile_events": self._c_compile.total(),
+                "compile_s": self._c_compile_s.total(),
+                "compile_cached": self._c_compile.value(cached="true"),
+                "compile_fresh_s": self._c_compile_s.value(cached="false"),
+            }
 
     def tenant_snapshot(self) -> Dict:
         """Per-tenant counters + latency percentiles (the noisy-neighbor
@@ -126,59 +223,47 @@ class ServeMetrics:
             for tenant, t in self._tenants.items():
                 lat = sorted(t["lat"])
                 out[tenant] = {
-                    "completed": float(t["completed"]),
-                    "rejected": float(t["rejected"]),
-                    "over_quota": float(t["over_quota"]),
-                    "failed": float(t["failed"]),
+                    "completed": self._c_tenant.value(
+                        tenant=str(tenant), status="completed"),
+                    "rejected": self._c_tenant.value(
+                        tenant=str(tenant), status="rejected"),
+                    "over_quota": self._c_tenant.value(
+                        tenant=str(tenant), status="over_quota"),
+                    "failed": self._c_tenant.value(
+                        tenant=str(tenant), status="failed"),
                     "p50_ms": percentile(lat, 50) * 1e3,
                     "p95_ms": percentile(lat, 95) * 1e3,
                     "p99_ms": percentile(lat, 99) * 1e3,
                 }
             return out
 
-    def record_cancelled(self) -> None:
-        """Client cancelled the future while the request was queued."""
-        with self._lock:
-            self.cancelled += 1
-
-    def observe_queue_depth(self, depth: int) -> None:
-        with self._lock:
-            if depth > self.max_queue_depth:
-                self.max_queue_depth = depth
-
-    def reset_clock(self) -> None:
-        """Restart the throughput window (e.g. right after warmup) without
-        dropping counters."""
-        with self._lock:
-            self._t0 = time.perf_counter()
-            self.completed = 0
-            self._lat.clear()
-            for t in self._tenants.values():
-                t["completed"] = 0
-                t["lat"].clear()
-
     def snapshot(self) -> Dict[str, float]:
         with self._lock:
             lat = sorted(self._lat)
             elapsed = max(time.perf_counter() - self._t0, 1e-9)
-            mean_batch = (self.batched_samples / self.batches
-                          if self.batches else float("nan"))
+            completed = self._c_completed.total()
+            batches = self._c_batches.total()
+            real = self._c_real.total()
+            padded = self._c_padded.total()
             return {
-                "completed": float(self.completed),
-                "rejected": float(self.rejected),
-                "over_quota": float(self.over_quota),
-                "failed": float(self.failed),
-                "cancelled": float(self.cancelled),
-                "batches": float(self.batches),
-                "mean_batch": float(mean_batch),
-                "padded_frac": (self.padded_samples /
-                                max(self.batched_samples + self.padded_samples, 1)),
-                "max_queue_depth": float(self.max_queue_depth),
-                "throughput_rps": self.completed / elapsed,
+                "completed": completed,
+                "rejected": self._c_rejected.total(),
+                "over_quota": self._c_over_quota.total(),
+                "failed": self._c_failed.total(),
+                "cancelled": self._c_cancelled.total(),
+                "batches": batches,
+                "mean_batch": (real / batches if batches else float("nan")),
+                "padded_frac": padded / max(real + padded, 1),
+                "max_queue_depth": self._g_depth.value(),
+                "throughput_rps": completed / elapsed,
                 "p50_ms": percentile(lat, 50) * 1e3,
                 "p95_ms": percentile(lat, 95) * 1e3,
                 "p99_ms": percentile(lat, 99) * 1e3,
             }
+
+    def prometheus(self) -> str:
+        """The whole registry in Prometheus text exposition format."""
+        return self.registry.render()
 
     def report(self) -> str:
         s = self.snapshot()
