@@ -14,8 +14,11 @@ isolation), and the fused-datapath benchmark to ``BENCH_pr7.json`` (fused
 int artifact vs f32 vs unfused int at b1/b16, serve-side rps rows, interior
 quantize/dequantize census), and the observability benchmark to
 ``BENCH_pr8.json`` (serve-throughput overhead of the tracing spine with the
-tracer disabled vs enabled, plus span-coverage accounting) — the
-machine-readable perf trajectory successive PRs diff against.
+tracer disabled vs enabled, plus span-coverage accounting), and the
+per-layer search benchmark to ``BENCH_pr9.json`` (best searched
+mixed-precision plan vs best uniform grid point on the acc/bytes frontier,
+bit-exact registry serve of the searched artifact) — the machine-readable
+perf trajectory successive PRs diff against.
 """
 
 from __future__ import annotations
@@ -34,7 +37,7 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table2,table3,fig5,roofline,compile,"
-                         "serve,cluster,farm,pr7,pr8")
+                         "serve,cluster,farm,pr7,pr8,pr9")
     ap.add_argument("--bench-json", default=None,
                     help="where the compile benchmark dict is written "
                          "(default: repo-root BENCH_pr2.json for full runs; "
@@ -97,6 +100,10 @@ def main(argv=None) -> None:
         from benchmarks import obs_bench
         obs_bench.write_json(obs_bench.run(quick=args.quick),
                              quick=args.quick)
+    if want("pr9"):
+        from benchmarks import search_bench
+        search_bench.write_json(search_bench.run(quick=args.quick),
+                                quick=args.quick)
     if want("roofline"):
         from benchmarks import roofline
         try:

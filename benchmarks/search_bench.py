@@ -1,0 +1,234 @@
+"""Per-layer mixed-precision search benchmark (ISSUE 9 acceptance).
+
+Runs the uniform DEFAULT_GRID farm and the successive-halving per-layer
+search over ONE shared cache dir (the uniform anchors inside the search's
+final rung replay from the farm's entries), then compares the best searched
+per-layer candidate against the best uniform point on the acc/bytes
+frontier:
+
+* ``searched_dominates`` — the plan is at-least-as-good on both axes and
+  strictly better on one;
+* ``searched_ties_fewer_bytes`` — accuracy within 0.02 of the uniform knee
+  with STRICTLY fewer int weight bytes (the paper's knee argument, applied
+  per layer);
+* ``searched_beats_uniform`` — either of the above.
+
+Short-QAT accuracy on the synthetic task is NOISY across training seeds
+(σ ≈ 0.05 per run even at convergence — fake-quant rounding makes
+trajectories chaotically seed-sensitive), so the full run does not trust a
+single-seed comparison: the uniform knee and the top searched plans are
+re-scored at ``CONFIRM_SEEDS`` extra sweep seeds (cache-shared, resumable
+like every farm run) and the dominates/ties verdict is taken on the
+per-candidate MEAN accuracy.  Weight bytes are seed-independent.
+
+The chosen plan is then published through the registry and its served
+features replayed against the sweep-time probe digest
+(``searched_serve_bitexact``) — the deployed-accuracy contract extended to
+mixed precision.
+
+Prints ``search,<metric>,<value>`` CSV lines and RETURNS the dict; ``main``
+serializes to ``BENCH_pr9.json`` (full runs) or the system temp dir
+(``--quick``/``--smoke`` — never clobbers the committed trajectory file).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import shutil
+import tempfile
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.explore import (DEFAULT_GRID, SweepFarm, as_candidate, probe_batch,
+                           publish_frontier, search, select_knee)
+from repro.serve import ArtifactRegistry
+
+ACC_TOL = 0.02
+
+
+def run(quick: bool = False, smoke: bool = False, *, seed: int = 0) -> Dict:
+    results: Dict = {}
+
+    def emit(metric: str, value) -> None:
+        results[metric] = value
+        print(f"search,{metric},{value:.4g}"
+              if isinstance(value, float) else f"search,{metric},{value}")
+
+    # the search's FINAL rung runs the same (steps, episodes) budget as the
+    # uniform farm — same cache identity, so the anchors are cache hits and
+    # the comparison is budget-for-budget honest
+    if smoke:
+        shared = dict(width=4, n_base=6, n_novel=5, img=16, batch=8,
+                      bench_batch=2, bench_iters=1)
+        steps, episodes = 2, 2
+        rungs = ({"steps": 2, "episodes": 2, "keep": 4},
+                 {"steps": 2, "episodes": 2, "keep": 3})
+        pop, children = 6, 2
+        confirm_seeds = ()
+    elif quick:
+        shared = dict(width=4, bench_iters=3)
+        steps, episodes = 20, 3
+        rungs = ({"steps": 6, "episodes": 2, "keep": 6},
+                 {"steps": 20, "episodes": 3, "keep": 5})
+        pop, children = 10, 3
+        confirm_seeds = ()
+    else:
+        # full: budgets where QAT actually converges (final loss < 0.01 —
+        # 120-step accuracies are dominated by training noise), plus
+        # extra confirmation seeds for the finalists
+        shared = dict(width=8)
+        steps, episodes = 900, 20
+        rungs = ({"steps": 240, "episodes": 8, "keep": 8},
+                 {"steps": 900, "episodes": 20, "keep": 6})
+        pop, children = 12, 4
+        confirm_seeds = (seed + 1, seed + 2)
+
+    cache = tempfile.mkdtemp(prefix="search_bench_")
+    try:
+        t0 = time.perf_counter()
+        uniform = SweepFarm(cache, seed=seed, steps=steps, episodes=episodes,
+                            verbose=False, **shared).run(DEFAULT_GRID)
+        emit("uniform_farm_s", time.perf_counter() - t0)
+        knee = select_knee(uniform.points, uniform.frontier)
+        u = uniform.points[knee]
+        emit("uniform_best_label", u["label"])
+        emit("uniform_best_acc", float(u["acc_mean"]))
+        emit("uniform_best_bytes", int(u["weight_bytes_int"]))
+        results["uniform_points"] = [
+            {"label": p["label"], "acc_mean": p["acc_mean"],
+             "weight_bytes_int": p["weight_bytes_int"],
+             "modeled_ms": p.get("modeled_ms")} for p in uniform.points]
+
+        t0 = time.perf_counter()
+        sres = search(cache, seed=seed, rungs=rungs, pop_size=pop,
+                      children=children, verbose=False, **shared)
+        emit("search_s", time.perf_counter() - t0)
+        emit("search_candidates_scored", len(sres.rungs[0]["population"])
+             + sum(len(r["population"]) for r in sres.rungs[1:]))
+        emit("search_cache_hits_final_rung", sres.farm.hits)
+        emit("search_failed", sum(len(r["failed"]) for r in sres.rungs))
+
+        results["search_points"] = [
+            {"label": p["label"], "acc_mean": p["acc_mean"],
+             "weight_bytes_int": p["weight_bytes_int"],
+             "modeled_ms": p.get("modeled_ms"), "plan": p.get("plan")}
+            for p in sres.points]
+
+        # finalists: the best mixed plans JUDGED AGAINST the uniform knee
+        # on the single-seed search records — dominating plans first, then
+        # within-tolerance byte-savers, then best-ranked mixed as fallback
+        def _dom(p):
+            return (p["acc_mean"] >= u["acc_mean"]
+                    and p["weight_bytes_int"] <= u["weight_bytes_int"]
+                    and (p["acc_mean"] > u["acc_mean"]
+                         or p["weight_bytes_int"] < u["weight_bytes_int"]))
+
+        def _tie(p):
+            return (p["acc_mean"] >= u["acc_mean"] - ACC_TOL
+                    and p["weight_bytes_int"] < u["weight_bytes_int"])
+
+        mixed = [i for i in sres.ranked if sres.points[i].get("plan")]
+        if not mixed:
+            emit("searched_beats_uniform", False)
+            return results
+        pool = ([i for i in mixed if _dom(sres.points[i])]
+                or [i for i in mixed if _tie(sres.points[i])]
+                or mixed)
+        pool = sorted(pool, key=lambda i: (-sres.points[i]["acc_mean"],
+                                           sres.points[i]["weight_bytes_int"]))
+        finalists = pool[:2]
+
+        # confirmation: re-score the knee + finalists at extra sweep seeds
+        # and verdict on MEAN accuracy — single short-QAT runs are too
+        # seed-noisy for a 0.02-tolerance comparison (module docstring)
+        knee_cand = as_candidate(u["candidate"])
+        accs = {i: [float(sres.points[i]["acc_mean"])] for i in finalists}
+        u_accs = [float(u["acc_mean"])]
+        for cs in confirm_seeds:
+            cfarm = SweepFarm(cache, seed=cs, steps=steps, episodes=episodes,
+                              verbose=False, **shared)
+            cres = cfarm.run([knee_cand] + [
+                as_candidate(sres.points[i]["candidate"]) for i in finalists])
+            u_accs.append(float(cres.points[0]["acc_mean"]))
+            for j, i in enumerate(finalists):
+                accs[i].append(float(cres.points[j + 1]["acc_mean"]))
+        emit("confirm_seeds", 1 + len(confirm_seeds))
+        u_acc = sum(u_accs) / len(u_accs)
+        u_bytes = int(u["weight_bytes_int"])
+        results["uniform_acc_seeds"] = u_accs
+        emit("uniform_acc_mean_seeds", u_acc)
+
+        def _verdict(i):
+            a = sum(accs[i]) / len(accs[i])
+            b = int(sres.points[i]["weight_bytes_int"])
+            dom = (a >= u_acc and b <= u_bytes and (a > u_acc or b < u_bytes))
+            tie = (a >= u_acc - ACC_TOL and b < u_bytes)
+            return dom, tie, a
+
+        verdicts = {i: _verdict(i) for i in finalists}
+        idx = max(finalists,
+                  key=lambda i: (verdicts[i][0] or verdicts[i][1],
+                                 verdicts[i][2],
+                                 -sres.points[i]["weight_bytes_int"]))
+        dominates, ties, s_acc = verdicts[idx]
+        s = sres.points[idx]
+        emit("searched_label", s["label"])
+        emit("searched_acc", float(s["acc_mean"]))
+        emit("searched_acc_mean_seeds", s_acc)
+        emit("searched_bytes", int(s["weight_bytes_int"]))
+        emit("searched_modeled_ms", float(s.get("modeled_ms") or 0.0))
+        results["searched_plan"] = s["plan"]
+        results["searched_acc_seeds"] = accs[idx]
+
+        emit("searched_dominates", bool(dominates))
+        emit("searched_ties_fewer_bytes", bool(ties))
+        emit("searched_beats_uniform", bool(dominates or ties))
+        emit("bytes_saved_vs_uniform", u_bytes - int(s["weight_bytes_int"]))
+
+        # publish THE searched point and replay its sweep-time probe through
+        # the registry — served bit-for-bit or the comparison is meaningless
+        registry = ArtifactRegistry()
+        names = publish_frontier(
+            dataclasses.replace(sres.farm, frontier=[idx]), registry)
+        served = registry.get(names[0])
+        probe = np.asarray(probe_batch(s["point_seed"],
+                                       shared.get("bench_batch", 8),
+                                       shared.get("img", 32)))
+        got = np.asarray(served.feats(probe))
+        emit("searched_serve_bitexact",
+             hashlib.sha256(got.tobytes()).hexdigest() == s["probe_digest"])
+        emit("searched_artifact", names[0])
+    finally:
+        shutil.rmtree(cache, ignore_errors=True)
+    return results
+
+
+def write_json(results: Dict, path: str = None, quick: bool = False) -> str:
+    try:
+        from benchmarks.bench_io import write_bench_json
+    except ImportError:                       # run as a bare script
+        from bench_io import write_bench_json
+    return write_bench_json(results, benchmark="search",
+                            basename="BENCH_pr9.json", path=path, quick=quick)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal run for the CI smoke step")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: repo-root BENCH_pr9.json for "
+                         "full runs, temp dir for --quick/--smoke)")
+    args = ap.parse_args(argv)
+    results = run(quick=args.quick, smoke=args.smoke)
+    write_json(results, args.json, quick=args.quick or args.smoke)
+
+
+if __name__ == "__main__":
+    main()

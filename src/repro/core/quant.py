@@ -23,7 +23,9 @@ Conventions (matching the paper's Table II notation):
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+import hashlib
+import json
+from typing import Dict, Mapping, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -31,6 +33,7 @@ import numpy as np
 
 __all__ = [
     "FixedPointSpec",
+    "LayerQuantPlan",
     "QuantConfig",
     "quantize",
     "dequantize",
@@ -119,6 +122,35 @@ class QuantConfig:
     weight: Optional[FixedPointSpec] = None  # conv / linear weights
     act: Optional[FixedPointSpec] = None  # post-activation tensors
     cache: Optional[FixedPointSpec] = None  # KV / SSM-state storage (serving)
+    # Per-layer overrides: ``(layer_name, QuantConfig)`` pairs, sorted by
+    # name.  ``layer(name)`` resolves a layer's effective config; layers
+    # without an override ride the top-level (uniform) specs.  A tuple (not
+    # a dict) keeps the dataclass frozen/hashable so configs stay valid
+    # cache-key material.
+    layers: Tuple[Tuple[str, "QuantConfig"], ...] = ()
+
+    def layer(self, name: str) -> "QuantConfig":
+        """Effective config for a named layer: its override when one exists,
+        else this config's uniform specs.  The QAT forward, the graph
+        exporter and the DSE sweep all resolve per-layer bit-widths through
+        this ONE method, so train-time and compile-time can never disagree
+        about what grid a layer runs on."""
+        for n, cfg in self.layers:
+            if n == name:
+                return cfg
+        return self
+
+    @staticmethod
+    def per_layer(plan: "LayerQuantPlan") -> "QuantConfig":
+        """Config from a :class:`LayerQuantPlan` — every named layer gets its
+        own ``grid_point`` config; the plan default covers the graph input
+        and any unnamed layer."""
+        dw, da = plan.default
+        base = QuantConfig.grid_point(dw, da)
+        return dataclasses.replace(
+            base,
+            layers=tuple((name, QuantConfig.grid_point(w, a))
+                         for name, (w, a) in plan.layers))
 
     @staticmethod
     def paper_w6a4() -> "QuantConfig":
@@ -161,6 +193,80 @@ class QuantConfig:
             weight=FixedPointSpec(cb, conv_frac, signed=True),
             act=FixedPointSpec(ab, act_frac, signed=False),
         )
+
+
+# --------------------------------------------------------------------------
+# Per-layer mixed-precision plans (the DSE search's candidate encoding)
+# --------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerQuantPlan:
+    """A per-layer ``(W, A)`` bit-width assignment — the mixed-precision
+    candidate the DSE search explores.
+
+    Each named layer maps to a ``(w_bits, a_bits)`` pair under the SAME
+    ``grid_point`` frac-split convention the uniform sweep uses; ``default``
+    covers the graph input and any layer the map omits.  Assignments are
+    canonicalized (sorted by name, ints coerced) at construction so two
+    plans with the same content are ``==``, hash alike, and serialize to the
+    same JSON — the property the farm's content-hash cache keys and the
+    per-candidate PRNG streams rely on.
+    """
+
+    layers: Tuple[Tuple[str, Tuple[int, int]], ...]
+    default: Tuple[int, int] = (8, 8)
+
+    def __post_init__(self):
+        pairs = [(str(n), (int(w), int(a))) for n, (w, a) in self.layers]
+        names = [n for n, _ in pairs]
+        if len(set(names)) != len(names):
+            dupes = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(f"duplicate layer assignment(s): {dupes}")
+        object.__setattr__(self, "layers", tuple(sorted(pairs)))
+        dw, da = self.default
+        object.__setattr__(self, "default", (int(dw), int(da)))
+
+    @classmethod
+    def from_dict(cls, d: Mapping) -> "LayerQuantPlan":
+        """Inverse of :meth:`to_dict` (accepts any insertion order)."""
+        return cls(layers=tuple((n, tuple(wa))
+                                for n, wa in dict(d["layers"]).items()),
+                   default=tuple(d.get("default", (8, 8))))
+
+    @classmethod
+    def uniform(cls, w_bits: int, a_bits: int,
+                names: Sequence[str] = ()) -> "LayerQuantPlan":
+        """The uniform grid point expressed as a plan (search seeding)."""
+        wa = (int(w_bits), int(a_bits))
+        return cls(layers=tuple((n, wa) for n in names), default=wa)
+
+    def bits_for(self, name: str) -> Tuple[int, int]:
+        for n, wa in self.layers:
+            if n == name:
+                return wa
+        return self.default
+
+    def replace_layer(self, name: str, w_bits: int,
+                      a_bits: int) -> "LayerQuantPlan":
+        pairs = tuple((n, wa) for n, wa in self.layers if n != name)
+        return dataclasses.replace(
+            self, layers=pairs + ((name, (int(w_bits), int(a_bits))),))
+
+    def quant_config(self) -> QuantConfig:
+        return QuantConfig.per_layer(self)
+
+    def to_dict(self) -> Dict:
+        """Canonical JSON form — content-key material (sorted, ints only)."""
+        return {"default": list(self.default),
+                "layers": {n: [w, a] for n, (w, a) in self.layers}}
+
+    def digest(self, length: int = 10) -> str:
+        blob = json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+        return hashlib.sha256(blob.encode()).hexdigest()[:length]
+
+    def describe(self) -> str:
+        body = ",".join(f"{n}=w{w}a{a}" for n, (w, a) in self.layers)
+        return f"mp[{body or 'default'}|w{self.default[0]}a{self.default[1]}]"
 
 
 # --------------------------------------------------------------------------

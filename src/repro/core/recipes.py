@@ -32,12 +32,43 @@ class BuildRecipe:
     ``exporter(model, qcfg) -> Graph`` lets ``repro.compile`` accept the
     architecture's native model object (e.g. a ResNet-9 param tree) instead
     of a pre-exported graph.
+
+    The optional FSL hooks make an architecture a first-class citizen of the
+    few-shot pipeline and the DSE farm WITHOUT anything outside the model
+    module hard-coding it (the pre-PR 9 farm silently restored every cache
+    entry as resnet9 — wrong-shaped params for any second backbone):
+
+    * ``init_params(key, width) -> params`` — a fresh backbone tree (the
+      farm's checkpoint-restore skeleton);
+    * ``feature_dim(width) -> int`` — the backbone's feature width;
+    * ``forward(params, x, qcfg, width) -> feats`` — the QAT forward;
+    * ``quant_layers(width) -> {"names": [...], "coupled_act": [[...]]}`` —
+      the architecture's quantizable layer names plus the groups whose
+      activation grids a residual add forces onto a common fraction (the
+      mixed-precision search's feasibility constraint).
     """
 
     name: str
     passes: Tuple[str, ...]
     description: str = ""
     exporter: Optional[Callable] = None
+    init_params: Optional[Callable] = None
+    feature_dim: Optional[Callable] = None
+    forward: Optional[Callable] = None
+    quant_layers: Optional[Callable] = None
+
+    def require_fsl_hooks(self) -> "BuildRecipe":
+        """Fail loudly when this recipe cannot drive the FSL pipeline/farm —
+        the wrong-arch failure mode is a silent wrong-shaped restore, so the
+        check happens up front, by name."""
+        missing = [h for h in ("init_params", "feature_dim", "forward")
+                   if getattr(self, h) is None]
+        if missing:
+            raise ValueError(
+                f"recipe '{self.name}' has no FSL hooks {missing}; register "
+                "it with init_params/feature_dim/forward to use it with "
+                "FSLPipeline or the DSE farm")
+        return self
 
 
 _RECIPES: Dict[str, BuildRecipe] = {}
@@ -50,12 +81,18 @@ _LAZY: Dict[str, str] = {"resnet9": "repro.models.resnet9"}
 
 def register_recipe(name: str, passes: Sequence[str], *,
                     description: str = "",
-                    exporter: Optional[Callable] = None) -> BuildRecipe:
+                    exporter: Optional[Callable] = None,
+                    init_params: Optional[Callable] = None,
+                    feature_dim: Optional[Callable] = None,
+                    forward: Optional[Callable] = None,
+                    quant_layers: Optional[Callable] = None) -> BuildRecipe:
     for p in passes:
         if isinstance(p, str) and p not in P.PASS_REGISTRY:
             raise KeyError(f"recipe '{name}' references unknown pass '{p}'; "
                            f"registered: {sorted(P.PASS_REGISTRY)}")
-    r = BuildRecipe(name, tuple(passes), description, exporter)
+    r = BuildRecipe(name, tuple(passes), description, exporter,
+                    init_params=init_params, feature_dim=feature_dim,
+                    forward=forward, quant_layers=quant_layers)
     _RECIPES[name] = r
     return r
 

@@ -1,10 +1,12 @@
 """Design-space exploration over bit-width configurations (paper Tables
-II/III): compile a grid of (W, A) points through both datapaths, measure
+II/III): compile a grid of candidates through both datapaths, measure
 episode accuracy / storage bytes / throughput, and emit the frontier.
 
 ``sweep`` is the serial in-process loop; ``SweepFarm`` is the parallel,
-resumable orchestrator over the same per-point unit (``run_point``), and
-``publish_frontier`` pushes the Pareto set into a live serve registry.
+resumable orchestrator over the same per-candidate unit (``run_candidate``,
+of which ``run_point`` is the uniform-grid alias), ``publish_frontier``
+pushes the Pareto set into a live serve registry, and ``search`` drives the
+per-layer mixed-precision successive-halving search over the farm.
 """
 
 from repro.explore.farm import (  # noqa: F401
@@ -13,20 +15,38 @@ from repro.explore.farm import (  # noqa: F401
     publish_frontier,
     select_knee,
 )
+from repro.explore.search import (  # noqa: F401
+    SearchResult,
+    crossover_plans,
+    mutate_plan,
+    random_plan,
+    search,
+)
 from repro.explore.sweep import (  # noqa: F401
     DEFAULT_GRID,
     DETERMINISTIC_KEYS,
+    Candidate,
     PointResult,
+    as_candidate,
+    candidate_config,
+    candidate_content,
+    candidate_label,
+    candidate_seed,
     config_for,
     pareto_frontier,
     point_seed,
     probe_batch,
+    run_candidate,
     run_point,
     sweep,
 )
 
 __all__ = [
-    "DEFAULT_GRID", "DETERMINISTIC_KEYS", "FarmResult", "PointResult",
-    "SweepFarm", "config_for", "pareto_frontier", "point_seed",
-    "probe_batch", "publish_frontier", "run_point", "select_knee", "sweep",
+    "Candidate", "DEFAULT_GRID", "DETERMINISTIC_KEYS", "FarmResult",
+    "PointResult", "SearchResult", "SweepFarm", "as_candidate",
+    "candidate_config", "candidate_content", "candidate_label",
+    "candidate_seed", "config_for", "crossover_plans", "mutate_plan",
+    "pareto_frontier", "point_seed", "probe_batch", "publish_frontier",
+    "random_plan", "run_candidate", "run_point", "search", "select_knee",
+    "sweep",
 ]

@@ -39,18 +39,26 @@ import dataclasses
 import hashlib
 import json
 import threading
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import jax
 import numpy as np
 
-from repro.core.quant import QuantConfig, fake_quant
+from repro.core.quant import LayerQuantPlan, QuantConfig, fake_quant
 from repro.data.synthetic import SyntheticImages
 from repro.fsl.pipeline import FSLPipeline, evaluate_episodes, pretrain_backbone
 
-__all__ = ["DEFAULT_GRID", "DETERMINISTIC_KEYS", "PointResult", "config_for",
-           "pareto_frontier", "point_seed", "probe_batch", "run_point",
-           "sweep"]
+__all__ = ["DEFAULT_GRID", "DETERMINISTIC_KEYS", "Candidate", "PointResult",
+           "as_candidate", "candidate_config", "candidate_content",
+           "candidate_label", "candidate_seed", "config_for",
+           "pareto_frontier", "point_seed", "probe_batch", "run_candidate",
+           "run_point", "sweep"]
+
+# A DSE candidate: a uniform (W, A) grid point or a per-layer mixed-precision
+# plan.  Both are hashable, canonically JSON-encodable (candidate_content) and
+# therefore content-keyable exactly like the original tuples — the farm's
+# resume/replay machinery carries over unchanged.
+Candidate = Union[Tuple[int, int], LayerQuantPlan]
 
 # (weight_bits, act_bits) grid — paper Table II's sweep axis, bracketing the
 # chosen w6a4 point from "collapses" (tiny) to "conventional" (wide).
@@ -64,9 +72,10 @@ _BENCH_LOCK = threading.Lock()
 # cache-identity tests compare exactly these; latency fields are measured
 # and legitimately vary run to run.
 DETERMINISTIC_KEYS: Tuple[str, ...] = (
-    "w_bits", "a_bits", "weight_spec", "act_spec", "acc_mean", "acc_ci95",
-    "weight_bytes_f32", "weight_bytes_int", "bitexact_int_vs_f32",
-    "final_pretrain_loss", "seed", "point_seed", "probe_digest")
+    "arch", "label", "candidate", "w_bits", "a_bits", "weight_spec",
+    "act_spec", "acc_mean", "acc_ci95", "weight_bytes_f32",
+    "weight_bytes_int", "bitexact_int_vs_f32", "final_pretrain_loss", "seed",
+    "point_seed", "probe_digest")
 
 
 def config_for(w_bits: int, a_bits: int) -> QuantConfig:
@@ -77,6 +86,57 @@ def config_for(w_bits: int, a_bits: int) -> QuantConfig:
     return QuantConfig.grid_point(w_bits, a_bits)
 
 
+# ---------------------------------------------------------------------------
+# Candidate protocol — everything the farm/search need from a descriptor
+# ---------------------------------------------------------------------------
+def as_candidate(cand: Union[Candidate, Sequence[int], Dict]) -> Candidate:
+    """Normalize a candidate descriptor: ``(W, A)`` pairs (any 2-sequence)
+    become int tuples, plan dicts/``LayerQuantPlan`` become plans.  A plan
+    with no overrides collapses to its uniform tuple, so the two encodings
+    of the same point share one cache identity."""
+    if isinstance(cand, LayerQuantPlan):
+        return cand.default if not cand.layers else cand
+    if isinstance(cand, dict):
+        return as_candidate(LayerQuantPlan.from_dict(cand))
+    w, a = cand
+    return (int(w), int(a))
+
+
+def candidate_label(cand: Candidate) -> str:
+    """Short registry/log name: ``w6a4`` for uniform points (the pre-PR 9
+    artifact naming, preserved), ``mp-<digest>`` for per-layer plans."""
+    cand = as_candidate(cand)
+    if isinstance(cand, LayerQuantPlan):
+        return f"mp-{cand.digest()}"
+    return f"w{cand[0]}a{cand[1]}"
+
+
+def candidate_content(cand: Candidate):
+    """Canonical JSON-able identity — what content keys and records carry.
+    Uniform points stay ``[W, A]`` (the farm's historical key layout); plans
+    serialize to their full ``{default, layers}`` dict."""
+    cand = as_candidate(cand)
+    if isinstance(cand, LayerQuantPlan):
+        return cand.to_dict()
+    return [cand[0], cand[1]]
+
+
+def candidate_config(cand: Candidate) -> QuantConfig:
+    """The QuantConfig a candidate trains AND deploys at (one grid, both
+    sides — the deployed-accuracy contract, per layer when mixed)."""
+    cand = as_candidate(cand)
+    if isinstance(cand, LayerQuantPlan):
+        return cand.quant_config()
+    return QuantConfig.grid_point(*cand)
+
+
+def _seed63(blob: bytes) -> int:
+    # 63 bits of the sha256 digest: collision-safe at per-layer-search
+    # population sizes (the 31-bit form birthday-collides around ~50k
+    # candidates) and still inside every consumer's int64 range.
+    return int.from_bytes(hashlib.sha256(blob).digest()[:8], "big") >> 1
+
+
 def point_seed(seed: int, w_bits: int, a_bits: int) -> int:
     """Per-point PRNG seed derived from the sweep seed and the grid point.
 
@@ -84,10 +144,22 @@ def point_seed(seed: int, w_bits: int, a_bits: int) -> int:
     insertion — adding one new point to a swept grid leaves every other
     point's stream (and therefore its cache key and cached result) intact —
     and collision-free across points, so farm workers running concurrently
-    never share a stream.
+    never share a stream.  63 bits wide (see :func:`candidate_seed`); the
+    farm's cache-key version gates stale 31-bit-era entries.
     """
     blob = f"{int(seed)}:{int(w_bits)}:{int(a_bits)}".encode()
-    return int.from_bytes(hashlib.sha256(blob).digest()[:4], "big") % (2**31)
+    return _seed63(blob)
+
+
+def candidate_seed(seed: int, cand: Candidate) -> int:
+    """Per-candidate PRNG stream — :func:`point_seed` generalized to plans
+    (content-hashed over the canonical plan JSON)."""
+    cand = as_candidate(cand)
+    if isinstance(cand, tuple):
+        return point_seed(seed, *cand)
+    blob = f"{int(seed)}:plan:" + json.dumps(
+        candidate_content(cand), sort_keys=True, separators=(",", ":"))
+    return _seed63(blob.encode())
 
 
 def probe_batch(pseed: int, n: int, img: int) -> jax.Array:
@@ -98,18 +170,34 @@ def probe_batch(pseed: int, n: int, img: int) -> jax.Array:
 
 def pareto_frontier(points: Sequence[Dict]) -> List[int]:
     """Indices of points not dominated on (maximize accuracy, minimize int
-    weight bytes)."""
-    frontier = []
-    for i, p in enumerate(points):
-        dominated = any(
-            q["acc_mean"] >= p["acc_mean"]
-            and q["weight_bytes_int"] <= p["weight_bytes_int"]
-            and (q["acc_mean"] > p["acc_mean"]
-                 or q["weight_bytes_int"] < p["weight_bytes_int"])
-            for j, q in enumerate(points) if j != i)
-        if not dominated:
-            frontier.append(i)
-    return frontier
+    weight bytes), ascending.
+
+    Sort-then-scan, O(n log n) — the all-pairs form was O(n²), which the
+    per-layer search regime (thousands of candidates per rung) turned into
+    the ranking bottleneck.  Semantics are unchanged: domination requires ≥
+    on both axes with ONE strict, so exact duplicates never dominate each
+    other (both survive), a byte-tie keeps only the best-accuracy members,
+    and an accuracy-tie keeps only the fewest-bytes members.
+    """
+    n = len(points)
+    order = sorted(range(n), key=lambda i: (points[i]["weight_bytes_int"],
+                                            -points[i]["acc_mean"]))
+    frontier: List[int] = []
+    best_acc = -float("inf")     # max accuracy among strictly-smaller-bytes
+    i = 0
+    while i < n:
+        j = i
+        b = points[order[i]]["weight_bytes_int"]
+        while j < n and points[order[j]]["weight_bytes_int"] == b:
+            j += 1
+        group = order[i:j]
+        gmax = max(points[k]["acc_mean"] for k in group)
+        if gmax > best_acc:      # else: dominated by a smaller-bytes point
+            frontier.extend(k for k in group
+                            if points[k]["acc_mean"] == gmax)
+        best_acc = max(best_acc, gmax)
+        i = j
+    return sorted(frontier)
 
 
 @dataclasses.dataclass
@@ -127,24 +215,36 @@ class PointResult:
     probe_feats: np.ndarray
 
 
-def run_point(w_bits: int, a_bits: int, *, width: int = 8, steps: int = 120,
-              episodes: int = 10, batch: int = 32, bench_batch: int = 8,
-              bench_iters: int = 10, seed: int = 0,
-              data: Optional[SyntheticImages] = None,
-              n_base: int = 12, n_novel: int = 6,
-              verbose: bool = False) -> PointResult:
-    """Run ONE (W, A) grid point end to end; see the module docstring.
-
-    ``seed`` is the SWEEP seed; the point derives its own stream via
-    :func:`point_seed` so results are independent of which other points run,
-    in what order, or on which farm worker.  Deterministic record fields
-    (see ``DETERMINISTIC_KEYS``) are a pure function of the arguments.
+def run_point(w_bits: int, a_bits: int, **kw) -> PointResult:
+    """Run ONE uniform (W, A) grid point end to end — the historical entry
+    point, now a thin alias of :func:`run_candidate` on a tuple candidate.
     """
+    return run_candidate((w_bits, a_bits), **kw)
+
+
+def run_candidate(cand: Candidate, *, width: int = 8, steps: int = 120,
+                  episodes: int = 10, batch: int = 32, bench_batch: int = 8,
+                  bench_iters: int = 10, seed: int = 0,
+                  data: Optional[SyntheticImages] = None,
+                  n_base: int = 12, n_novel: int = 6, arch: str = "resnet9",
+                  verbose: bool = False) -> PointResult:
+    """Run ONE candidate (uniform grid point or per-layer plan) end to end;
+    see the module docstring.
+
+    ``seed`` is the SWEEP seed; the candidate derives its own stream via
+    :func:`candidate_seed` so results are independent of which other
+    candidates run, in what order, or on which farm worker.  Deterministic
+    record fields (see ``DETERMINISTIC_KEYS``) are a pure function of the
+    arguments.
+    """
+    cand = as_candidate(cand)
     if data is None:
         data = SyntheticImages(n_base=n_base, n_novel=n_novel, seed=seed)
-    ps = point_seed(seed, w_bits, a_bits)
-    qcfg = config_for(w_bits, a_bits)
-    pipe = FSLPipeline(width=width, qcfg=qcfg)
+    ps = candidate_seed(seed, cand)
+    qcfg = candidate_config(cand)
+    plan = cand if isinstance(cand, LayerQuantPlan) else None
+    w_bits, a_bits = plan.default if plan else cand
+    pipe = FSLPipeline(width=width, qcfg=qcfg, arch=arch)
     out = pretrain_backbone(data, pipe, steps=steps, batch=batch, seed=ps)
     params = out["params"]
 
@@ -180,6 +280,10 @@ def run_point(w_bits: int, a_bits: int, *, width: int = 8, steps: int = 120,
     prof = dm_int.profile(probe_q, xla=False)
     top = max(prof["nodes"], key=lambda r: r["est_ms"], default=None)
     record = {
+        "arch": arch,
+        "label": candidate_label(cand),
+        "candidate": candidate_content(cand),
+        "plan": plan.to_dict() if plan else None,
         "w_bits": w_bits, "a_bits": a_bits,
         "weight_spec": qcfg.weight.describe(),
         "act_spec": qcfg.act.describe(),
@@ -201,14 +305,14 @@ def run_point(w_bits: int, a_bits: int, *, width: int = 8, steps: int = 120,
         "probe_digest": hashlib.sha256(probe_feats.tobytes()).hexdigest(),
     }
     if verbose:
-        print(f"sweep,w{w_bits}a{a_bits},acc={acc:.3f}±{ci:.3f},"
+        print(f"sweep,{record['label']},acc={acc:.3f}±{ci:.3f},"
               f"bytes={record['weight_bytes_int']},"
               f"ms={record['int_ms_per_batch']:.2f},"
               f"bitexact={int(bitexact)}")
     return PointResult(record=record, params=params, probe_feats=probe_feats)
 
 
-def sweep(grid: Sequence[Tuple[int, int]] = DEFAULT_GRID, *,
+def sweep(grid: Sequence[Candidate] = DEFAULT_GRID, *,
           width: int = 8, steps: int = 120, episodes: int = 10,
           n_base: int = 12, n_novel: int = 6, batch: int = 32,
           bench_batch: int = 8, bench_iters: int = 10, seed: int = 0,
@@ -222,11 +326,11 @@ def sweep(grid: Sequence[Tuple[int, int]] = DEFAULT_GRID, *,
     if data is None:
         data = SyntheticImages(n_base=n_base, n_novel=n_novel, seed=seed)
     points: List[Dict] = []
-    for w_bits, a_bits in grid:
-        pr = run_point(w_bits, a_bits, width=width, steps=steps,
-                       episodes=episodes, batch=batch,
-                       bench_batch=bench_batch, bench_iters=bench_iters,
-                       seed=seed, data=data, verbose=verbose)
+    for cand in grid:
+        pr = run_candidate(cand, width=width, steps=steps,
+                           episodes=episodes, batch=batch,
+                           bench_batch=bench_batch, bench_iters=bench_iters,
+                           seed=seed, data=data, verbose=verbose)
         points.append(pr.record)
 
     result = {

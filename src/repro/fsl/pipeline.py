@@ -19,9 +19,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.quant import QuantConfig
+from repro.core.recipes import recipe
 from repro.data.synthetic import SyntheticImages
 from repro.fsl import ncm
-from repro.models import resnet9
 from repro.optim import adamw_init, adamw_update, cosine_warmup
 
 
@@ -29,6 +29,11 @@ from repro.optim import adamw_init, adamw_update, cosine_warmup
 class FSLPipeline:
     width: int = 16
     qcfg: Optional[QuantConfig] = None
+    # Backbone architecture, resolved through the BuildRecipe registry — the
+    # recipe's FSL hooks (init_params/feature_dim/forward) drive QAT and the
+    # exporter drives deploy(), so a second backbone plugs in by registering
+    # a recipe rather than by editing this module.
+    arch: str = "resnet9"
     n_way: int = 5
     k_shot: int = 5
     n_query: int = 15
@@ -53,10 +58,14 @@ class FSLPipeline:
         return cls(width=width, qcfg=QuantConfig.grid_point(w_bits, a_bits),
                    **kwargs)
 
+    def _hooks(self):
+        return recipe(self.arch).require_fsl_hooks()
+
     def features(self, params, x: jax.Array) -> jax.Array:
-        f = resnet9.forward(params, x, self.qcfg, self.width)
+        fwd = self._hooks().forward
+        f = fwd(params, x, self.qcfg, self.width)
         if self.easy_augment:
-            f = f + resnet9.forward(params, x[:, :, ::-1], self.qcfg, self.width)
+            f = f + fwd(params, x[:, :, ::-1], self.qcfg, self.width)
         return f
 
     def deploy(self, params, datapath: str = "f32"):
@@ -94,7 +103,7 @@ class FSLPipeline:
         if cached is not None and cached.params is params:
             self._deploy_cache.move_to_end(key)
             return cached
-        dm = compile_graph(params, self.qcfg, recipe="resnet9",
+        dm = compile_graph(params, self.qcfg, recipe=self.arch,
                            datapath=datapath)
         act = self.qcfg.act
         flip = self.easy_augment
@@ -174,17 +183,18 @@ def pretrain_backbone(data: SyntheticImages, pipe: FSLPipeline, steps: int = 150
                       batch: int = 64, lr: float = 2e-3, seed: int = 0,
                       log_every: int = 0) -> Dict:
     """Base-class pretraining: backbone + linear head, CE loss, AdamW."""
+    hooks = pipe._hooks()
     key = jax.random.PRNGKey(seed)
     kb, kh = jax.random.split(key)
-    params = {"backbone": resnet9.init_params(kb, pipe.width),
+    params = {"backbone": hooks.init_params(kb, pipe.width),
               "head": {"w": jax.random.normal(
-                  kh, (resnet9.feature_dim(pipe.width), data.n_base),
+                  kh, (hooks.feature_dim(pipe.width), data.n_base),
                   jnp.float32) * 0.02}}
     opt = adamw_init(params)
     sched = cosine_warmup(lr, warmup=max(steps // 20, 1), total=steps)
 
     def loss_fn(p, x, y):
-        f = resnet9.forward(p["backbone"], x, pipe.qcfg, pipe.width)
+        f = hooks.forward(p["backbone"], x, pipe.qcfg, pipe.width)
         logits = f @ p["head"]["w"]
         lse = jax.nn.logsumexp(logits, axis=-1)
         gold = jnp.take_along_axis(logits, y[:, None], axis=-1)[:, 0]

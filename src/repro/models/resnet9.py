@@ -52,6 +52,40 @@ def feature_dim(width: int = 64) -> int:
     return 8 * width
 
 
+def layer_names(width: int = 64) -> List[str]:
+    """Quantizable layer names, in plan order — the per-layer DSE axis."""
+    return [blk["name"] for blk in plan(width)]
+
+
+def coupled_act_groups(width: int = 64) -> List[List[str]]:
+    """Layer groups whose ACTIVATION grids must share a fraction.
+
+    A residual add sums the closing block's activation with the tensor that
+    entered the residual pair — two different fixed-point fractions there
+    would force the integer lowering to a float frontier mid-network (the
+    add is only code-exact on a common frac), and the next MVAU could no
+    longer lower.  Under the ``grid_point`` convention (``frac = a_bits −
+    2``) a common frac means equal ``a_bits``, so a feasible mixed-precision
+    plan assigns each group ONE activation width: {c1, r1b} and {c3, r2b}.
+    """
+    groups: List[List[str]] = []
+    entry = prev = None
+    for blk in plan(width):
+        if blk.get("res_open"):
+            entry = prev
+        if blk.get("res_close") and entry is not None:
+            groups.append([entry, blk["name"]])
+            entry = None
+        prev = blk["name"]
+    return groups
+
+
+def quant_layers(width: int = 64) -> Dict[str, Any]:
+    """The BuildRecipe ``quant_layers`` hook: names + act couplings."""
+    return {"names": layer_names(width),
+            "coupled_act": coupled_act_groups(width)}
+
+
 def init_params(key, width: int = 64) -> Params:
     p: Params = {}
     for blk in plan(width):
@@ -90,13 +124,22 @@ def _maxpool(x: jax.Array, k: int = 2) -> jax.Array:
 
 def forward(params: Params, x: jax.Array, qcfg: Optional[QuantConfig] = None,
             width: int = 64) -> jax.Array:
-    """x: (B, H, W, 3) NHWC in [0,1]-ish. Returns (B, 8·width) features."""
-    ws = qcfg.weight if qcfg else None
-    as_ = qcfg.act if qcfg else None
-    x = fake_quant(x, as_)
+    """x: (B, H, W, 3) NHWC in [0,1]-ish. Returns (B, 8·width) features.
+
+    Per-layer mixed precision: each block resolves its own specs through
+    ``qcfg.layer(name)`` — a uniform config (no overrides) resolves to
+    itself for every layer, so the pre-PR 9 behaviour is unchanged.  The
+    graph input rides the TOP-LEVEL activation grid (same convention as the
+    exporter's ``x`` dtype seed and the deploy-time input quant).
+    """
+    as_in = qcfg.act if qcfg else None
+    x = fake_quant(x, as_in)
     skip = None
     for blk in plan(width):
         p = params[blk["name"]]
+        lcfg = qcfg.layer(blk["name"]) if qcfg else None
+        ws = lcfg.weight if lcfg else None
+        as_ = lcfg.act if lcfg else None
         w_q = fake_quant(p["w"], ws).reshape(-1, blk["cout"])
         y = jnp.matmul(_im2col(x), w_q)                   # conv as im2col·W
         y = y * p["gamma"] + p["beta"]                    # BN affine (folded)
@@ -152,11 +195,12 @@ def export_graph(params: Params, qcfg: QuantConfig, width: int = 64,
     src = "x"  # NHWC, already on the activation grid
     hw = img
     skip_src = None
-    ws, as_ = qcfg.weight, qcfg.act
 
     for blk in plan(width):
         nm = blk["name"]
         p = params[blk["name"]]
+        lcfg = qcfg.layer(nm)                 # per-layer specs (self if uniform)
+        ws, as_ = lcfg.weight, lcfg.act
         w_q = np.asarray(fake_quant(p["w"], ws)).reshape(-1, blk["cout"])
         inits[f"{nm}_w"] = w_q.astype(np.float32)
         inits[f"{nm}_t"] = _block_thresholds(p, as_)
@@ -198,9 +242,9 @@ def export_graph(params: Params, qcfg: QuantConfig, width: int = 64,
     # Datatype seeds for InferDataTypes (core/datatypes.py): the input rides
     # the activation grid, weight initializers the weight grid; threshold
     # tables are float compile-time constants until integer lowering.
-    g.dtypes["x"] = as_
+    g.dtypes["x"] = qcfg.act
     for blk in plan(width):
-        g.dtypes[f"{blk['name']}_w"] = ws
+        g.dtypes[f"{blk['name']}_w"] = qcfg.layer(blk["name"]).weight
         g.dtypes[f"{blk['name']}_t"] = None
     return g
 
@@ -233,7 +277,11 @@ def _register_recipe():
          "fuse_matmul_threshold_to_mvau",
          "verify_hw_mappable"],
         description="paper's customized ResNet-9 flow (Sec. III-C/D fixes)",
-        exporter=_export_for_compile)
+        exporter=_export_for_compile,
+        init_params=init_params,
+        feature_dim=feature_dim,
+        forward=forward,
+        quant_layers=quant_layers)
 
 
 _register_recipe()

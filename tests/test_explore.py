@@ -86,6 +86,26 @@ def test_pareto_frontier_duplicate_points_both_survive():
     assert pareto_frontier(pts) == [0, 1]
 
 
+def test_pareto_frontier_matches_brute_force_on_random_clouds():
+    """The O(n log n) sort-then-scan must agree index-for-index with the
+    all-pairs O(n²) definition on dense random clouds (many exact ties —
+    the regime where tie semantics can silently drift)."""
+    import random
+
+    rng = random.Random(9)
+    for _ in range(25):
+        pts = [{"acc_mean": rng.choice([0.5, 0.6, 0.7, 0.8]),
+                "weight_bytes_int": rng.choice([10, 20, 30, 40])}
+               for _ in range(rng.randrange(1, 40))]
+        brute = [i for i, p in enumerate(pts)
+                 if not any(q["acc_mean"] >= p["acc_mean"]
+                            and q["weight_bytes_int"] <= p["weight_bytes_int"]
+                            and (q["acc_mean"] > p["acc_mean"]
+                                 or q["weight_bytes_int"] < p["weight_bytes_int"])
+                            for j, q in enumerate(pts) if j != i)]
+        assert pareto_frontier(pts) == brute
+
+
 def test_pareto_frontier_dominated_equal_on_one_axis():
     """Domination requires >= on both axes and > on at least one: a point
     equal on bytes but worse on acc IS dominated; a point trading one axis
@@ -106,7 +126,10 @@ def test_point_seed_is_deterministic_and_distinct():
     seeds = {point_seed(0, w, a) for w, a in DEFAULT_GRID}
     assert len(seeds) == len(DEFAULT_GRID), "grid points share a PRNG stream"
     assert point_seed(1, 6, 4) != point_seed(0, 6, 4)
-    assert all(0 <= s < 2**31 for s in seeds)
+    # 63-bit streams (ISSUE 9 bugfix: the 31-bit truncation birthday-collides
+    # at per-layer-search population sizes)
+    assert all(0 <= s < 2**63 for s in seeds)
+    assert any(s >= 2**31 for s in seeds), "seeds still truncated to 31 bits"
 
 
 def test_point_seed_stable_under_grid_changes():

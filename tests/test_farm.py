@@ -104,6 +104,101 @@ def test_thread_pool_dispatch_matches_serial(tmp_path):
 
 
 # ---------------------------------------------------------------------------
+# fault isolation (ISSUE 9): one raising candidate must not abort the farm
+# ---------------------------------------------------------------------------
+def test_failing_candidate_isolated_and_siblings_survive(tmp_path):
+    """A grid with one raising candidate ((40, 4): unrepresentable spec)
+    still returns results for every other candidate; the failure surfaces
+    as a structured entry, not an exception, and is excluded from the
+    frontier."""
+    result = _farm(tmp_path / "c", workers=2).run([(3, 2), (40, 4), (4, 4)])
+    assert result.errors[0] is None and result.errors[2] is None
+    assert result.errors[1] and "ValueError" in result.errors[1]
+    assert result.failed == [1]
+    assert result.cached == [False, False, False]
+    assert result.points[0]["bitexact_int_vs_f32"]
+    assert result.points[2]["bitexact_int_vs_f32"]
+    assert result.points[1]["error"] == result.errors[1]
+    assert result.points[1]["label"] == "w40a4"
+    assert 1 not in result.frontier and result.frontier
+    # the JSON form carries the failure too
+    assert result.to_dict()["errors"] == result.errors
+
+
+def test_failed_point_resume_recomputes_only_the_failure(tmp_path,
+                                                         monkeypatch):
+    """ISSUE 9 acceptance: after a run where one candidate failed
+    transiently, a re-run serves every finished sibling from cache and
+    computes ONLY the failed candidate."""
+    import importlib
+
+    # the package re-exports the sweep() FUNCTION under the same name, so
+    # resolve the submodule explicitly
+    sweep_mod = importlib.import_module("repro.explore.sweep")
+    real = sweep_mod.run_candidate
+
+    def flaky(cand, **kw):
+        if tuple(cand) == (6, 4):
+            raise RuntimeError("transient trainer crash")
+        return real(cand, **kw)
+
+    farm = _farm(tmp_path / "c")
+    monkeypatch.setattr(sweep_mod, "run_candidate", flaky)
+    first = farm.run(GRID2)
+    assert first.failed == [1] and "transient" in first.errors[1]
+    assert first.errors[0] is None
+
+    monkeypatch.setattr(sweep_mod, "run_candidate", real)
+    second = _farm(tmp_path / "c").run(GRID2)
+    assert second.cached == [True, False]      # only the failure recomputed
+    assert second.failed == [] and second.errors == [None, None]
+    assert second.points[0] == first.points[0]
+
+
+def test_unknown_arch_fails_loudly_at_construction(tmp_path):
+    with pytest.raises(KeyError, match="unknown recipe"):
+        _farm(tmp_path / "c", arch="mystery-net")
+
+
+def test_restore_point_arch_mismatch_raises(tmp_path):
+    """A cache entry swept under one arch must refuse to restore as another
+    (the pre-fix behaviour silently rebuilt resnet9-shaped params)."""
+    from repro.core.recipes import register_recipe
+    from repro.explore.farm import _restore_point
+
+    farm = _farm(tmp_path / "c")
+    result = farm.run([(3, 2)])
+    assert result.failed == []
+    register_recipe("other-net", ["verify_hw_mappable"],
+                    description="test stub")
+    with pytest.raises(ValueError, match="arch 'resnet9'"):
+        _restore_point(str(tmp_path / "c"), result.keys[0], WIDTH,
+                       BENCH_BATCH, arch="other-net")
+
+
+@pytest.mark.slow
+def test_process_pool_dispatch_matches_serial(tmp_path):
+    """mode='process' (spawn context) must produce the same deterministic
+    record fields as serial dispatch, isolate failures across the process
+    boundary, and share the cache dir."""
+    tiny = dict(width=2, steps=1, episodes=1, n_base=4, n_novel=5, img=8,
+                batch=4, bench_batch=2, bench_iters=1, verbose=False)
+    grid = [(3, 2), (40, 4), (4, 4)]
+    serial = SweepFarm(str(tmp_path / "s"), workers=1, **tiny).run(grid)
+    proc = SweepFarm(str(tmp_path / "p"), workers=2, mode="process",
+                     **tiny).run(grid)
+    assert proc.failed == [1] and "ValueError" in proc.errors[1]
+    for rs, rp in zip([serial.points[i] for i in (0, 2)],
+                      [proc.points[i] for i in (0, 2)]):
+        assert {k: rs[k] for k in DETERMINISTIC_KEYS} == \
+            {k: rp[k] for k in DETERMINISTIC_KEYS}
+    # a thread-mode re-run over the process-populated cache is all hits
+    again = SweepFarm(str(tmp_path / "p"), workers=1, **tiny).run(
+        [grid[0], grid[2]])
+    assert again.cached == [True, True]
+
+
+# ---------------------------------------------------------------------------
 # publish: sweep → serve the knee, bit for bit
 # ---------------------------------------------------------------------------
 def test_publish_frontier_serves_the_knee_bit_for_bit(farm_run):

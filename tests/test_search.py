@@ -1,0 +1,195 @@
+"""repro.explore.search — per-layer mixed-precision search (ISSUE 9
+tentpole acceptance):
+
+* plan candidates content-key stably (round-trip through JSON, collapse of
+  no-override plans onto their uniform tuple) so farm resume/replay carries
+  over to mixed precision;
+* plan generation/mutation/crossover never split a residual-coupled
+  activation group (every emitted plan lowers to the integer datapath);
+* a 2-rung successive-halving run on a tiny grid shrinks the population,
+  resumes from cache, and ranks on the acc/bytes/modeled-ms frontier;
+* a published mixed-precision artifact serves bit-for-bit against its
+  sweep-time probe digest, with the full per-layer plan in provenance.
+"""
+
+import hashlib
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.quant import LayerQuantPlan, QuantConfig
+from repro.explore import (
+    SweepFarm,
+    as_candidate,
+    candidate_config,
+    candidate_label,
+    candidate_seed,
+    crossover_plans,
+    mutate_plan,
+    probe_batch,
+    publish_frontier,
+    random_plan,
+    search,
+)
+from repro.models.resnet9 import coupled_act_groups, layer_names
+from repro.serve import ArtifactRegistry
+
+WIDTH, IMG, BENCH_BATCH = 4, 16, 2
+FARM_KW = dict(width=WIDTH, steps=2, episodes=2, n_base=6, n_novel=5,
+               img=IMG, batch=8, bench_batch=BENCH_BATCH, bench_iters=1,
+               verbose=False)
+SEARCH_KW = dict(width=WIDTH, seed=0, pop_size=5, children=2,
+                 rungs=({"steps": 2, "episodes": 2, "keep": 3},
+                        {"steps": 4, "episodes": 2, "keep": 2}),
+                 uniform_grid=((3, 2), (6, 4)),
+                 n_base=6, n_novel=5, img=IMG, batch=8,
+                 bench_batch=BENCH_BATCH, bench_iters=1, verbose=False)
+
+NAMES = layer_names(WIDTH)
+COUPLED = coupled_act_groups(WIDTH)
+PLAN = LayerQuantPlan.from_dict(
+    {"default": [6, 4], "layers": {"r2a": [4, 4], "r2b": [4, 4]}})
+
+
+# ---------------------------------------------------------------------------
+# LayerQuantPlan semantics
+# ---------------------------------------------------------------------------
+def test_plan_canonicalizes_and_round_trips():
+    a = LayerQuantPlan(layers=(("b", (4, 4)), ("a", (6, 4))), default=(8, 8))
+    b = LayerQuantPlan.from_dict(a.to_dict())
+    assert a == b and a.digest() == b.digest()
+    assert a.bits_for("a") == (6, 4) and a.bits_for("zz") == (8, 8)
+    with pytest.raises(ValueError, match="duplicate"):
+        LayerQuantPlan(layers=(("a", (4, 4)), ("a", (6, 4))))
+
+
+def test_per_layer_quant_config_resolves_each_layer():
+    qcfg = PLAN.quant_config()
+    assert qcfg.layer("r2a").weight.total_bits == 4
+    assert qcfg.layer("c0").weight.total_bits == 6       # default
+    assert qcfg.layer("c0") is qcfg                      # uniform fallback
+    uni = QuantConfig.grid_point(6, 4)
+    assert uni.layer("anything") is uni
+
+
+# ---------------------------------------------------------------------------
+# content-key round-trip stability (farm cache identity for plans)
+# ---------------------------------------------------------------------------
+def test_plan_content_key_round_trip_is_stable(tmp_path):
+    farm = SweepFarm(str(tmp_path), **FARM_KW)
+    k = farm.key_for(PLAN)
+    # JSON round trip preserves identity exactly
+    assert farm.key_for(LayerQuantPlan.from_dict(PLAN.to_dict())) == k
+    assert farm.key_for(PLAN.to_dict()) == k             # raw dict accepted
+    # a no-override plan collapses onto its uniform tuple's key
+    empty = LayerQuantPlan.from_dict({"default": [6, 4], "layers": {}})
+    assert as_candidate(empty) == (6, 4)
+    assert farm.key_for(empty) == farm.key_for(6, 4)
+    # any bit change changes the key
+    assert farm.key_for(PLAN.replace_layer("r2a", 3, 4)) != k
+    # labels and seeds are stable and distinct per plan
+    assert candidate_label(PLAN) == f"mp-{PLAN.digest()}"
+    assert candidate_seed(0, PLAN) == candidate_seed(0, PLAN)
+    assert candidate_seed(0, PLAN) != candidate_seed(0, (6, 4))
+    assert 0 <= candidate_seed(0, PLAN) < 2**63
+
+
+# ---------------------------------------------------------------------------
+# feasibility: coupled activation groups are never split
+# ---------------------------------------------------------------------------
+def _acts_coupled(plan):
+    return all(len({plan.bits_for(n)[1] for n in grp}) == 1
+               for grp in COUPLED)
+
+
+def test_random_mutate_crossover_respect_act_coupling():
+    rng = random.Random(0)
+    plans = [random_plan(rng, NAMES, COUPLED) for _ in range(20)]
+    assert all(_acts_coupled(p) for p in plans)
+    assert len({p.digest() for p in plans}) > 1          # actually random
+    for p in plans[:10]:
+        assert _acts_coupled(mutate_plan(rng, p, NAMES, COUPLED, n_mut=3))
+    for pa, pb in zip(plans[:5], plans[5:10]):
+        child = crossover_plans(rng, pa, pb, NAMES, COUPLED)
+        assert _acts_coupled(child)
+        for n in NAMES:                                  # genes from parents
+            assert child.bits_for(n)[0] in (pa.bits_for(n)[0],
+                                            pb.bits_for(n)[0])
+
+
+def test_resnet9_coupled_groups_are_the_residual_pairs():
+    assert COUPLED == [["c1", "r1b"], ["c3", "r2b"]]
+
+
+# ---------------------------------------------------------------------------
+# the 2-rung halving smoke (tier-1) + cache resume
+# ---------------------------------------------------------------------------
+def test_two_rung_halving_shrinks_population_and_resumes(tmp_path):
+    res = search(str(tmp_path / "c"), **SEARCH_KW)
+    assert len(res.rungs) == 2
+    r0, r1 = res.rungs
+    assert len(r0["survivors"]) <= 3 < len(r0["population"])
+    assert len(r1["population"]) <= 3 + 2                # survivors+children
+    assert set(r0["survivors"]) <= set(r1["population"])
+    assert res.ranked and res.frontier
+    assert res.best["acc_mean"] == max(
+        res.points[i]["acc_mean"] for i in res.frontier)
+    # per-layer records carry their plan; uniform anchors do not
+    for rec in res.points:
+        if rec["label"].startswith("mp-"):
+            assert rec["plan"]["layers"]
+        else:
+            assert rec["plan"] is None
+    # identical re-run: every rung replays from cache, same ranking
+    res2 = search(str(tmp_path / "c"), **SEARCH_KW)
+    assert res2.farm.hits == len(res2.farm.cached)
+    assert res2.ranked == res.ranked
+    assert [r["survivors"] for r in res2.rungs] == \
+        [r["survivors"] for r in res.rungs]
+
+
+def test_search_requires_quant_layers_hook(tmp_path):
+    from repro.core.recipes import register_recipe
+    from repro.models import resnet9
+
+    register_recipe("hookless-net", ["verify_hw_mappable"],
+                    init_params=resnet9.init_params,
+                    feature_dim=resnet9.feature_dim,
+                    forward=resnet9.forward)
+    with pytest.raises(ValueError, match="quant_layers"):
+        search(str(tmp_path), arch="hookless-net", **SEARCH_KW)
+
+
+# ---------------------------------------------------------------------------
+# publish: a mixed-precision artifact serves bit-for-bit
+# ---------------------------------------------------------------------------
+def test_published_mixed_precision_artifact_serves_bit_for_bit(tmp_path):
+    farm = SweepFarm(str(tmp_path / "c"), **FARM_KW)
+    result = farm.run([PLAN])
+    assert result.failed == [] and result.frontier == [0]
+    rec = result.points[0]
+    assert rec["label"] == f"mp-{PLAN.digest()}"
+    assert rec["plan"] == PLAN.to_dict()
+    assert rec["bitexact_int_vs_f32"]
+
+    registry = ArtifactRegistry()
+    names = publish_frontier(result, registry)
+    assert names == [f"mp-{PLAN.digest()}-int"]
+    served = registry.get(None)
+    assert served.name == names[0]
+    assert served.meta["plan"] == PLAN.to_dict()         # full provenance
+    assert served.meta["label"] == rec["label"]
+
+    # served features on the regenerated sweep-time probe == cached probe
+    # features, bit for bit (digest included) — on the PER-LAYER grid
+    cached = farm.restore_point(result.keys[0])
+    probe = np.asarray(probe_batch(rec["point_seed"], BENCH_BATCH, IMG))
+    got = np.asarray(served.feats(probe))
+    np.testing.assert_array_equal(got, cached.probe_feats)
+    assert hashlib.sha256(got.tobytes()).hexdigest() == rec["probe_digest"]
+
+    # the served config really is mixed: r2a narrower than default
+    qcfg = candidate_config(as_candidate(rec["candidate"]))
+    assert qcfg.layer("r2a").weight.total_bits == 4
+    assert qcfg.layer("c0").weight.total_bits == 6
