@@ -1,0 +1,175 @@
+"""Quantized LM decode serving benchmark (PR 10 acceptance).
+
+Compares the compiled integer-datapath decode artifact against the f32
+artifact of the SAME graph — raw executable latency at batch 1 and 16
+(the acceptance gate: int decode throughput >= f32 at both), weight
+bytes, and greedy decode served end-to-end through the ``ServeEngine``
+(tokens/s, zero-retrace check, bit-for-bit agreement between the served
+int datapath and the eager ``decode_step_ref``).
+
+The f32 artifact pays a 255-level ``searchsorted`` multithreshold at every
+activation-quantizer site; the int datapath streamlines those to cheap
+``quantize``/``requantize`` integer ops — that, plus int8 weight storage,
+is why narrow bit-widths are the FAST path here, same story as the PR 7
+CNN datapath but on the second workload.
+
+Prints ``decode,<metric>,<value>`` CSV lines and RETURNS the dict;
+``main`` serializes to ``BENCH_pr10.json`` (full runs) or the system temp
+dir (``--quick``/``--smoke`` — never clobbers the committed file).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+import jax
+import numpy as np
+
+import repro.configs.lm_tiny  # noqa: F401  (registers the arch)
+from repro.models import lm
+from repro.models.common import get_config
+from repro.serve import ArtifactRegistry, ServeEngine
+from repro.serve.decode import (
+    DecodeAdapter,
+    build_decode_artifact,
+    greedy_generate,
+)
+
+
+def _feeds(cfg, batch: int, capacity: int):
+    rng = np.random.RandomState(0)
+    out = [rng.randint(0, cfg.vocab, size=(batch,)).astype(np.int32),
+           rng.randint(0, capacity, size=(batch,)).astype(np.int32)]
+    for _ in range(cfg.n_layers):
+        out.append(rng.randn(batch, capacity,
+                             cfg.d_model).astype(np.float32))
+        out.append(rng.randn(batch, capacity,
+                             cfg.d_model).astype(np.float32))
+    return tuple(out)
+
+
+def _eager_greedy(params, cfg, prompt, max_new, capacity):
+    caches = [np.zeros((1, capacity, cfg.d_model), np.float32)
+              for _ in range(2 * cfg.n_layers)]
+    pos, logits = 0, None
+    for t in prompt:
+        logits, caches = lm.decode_step_ref(
+            params, np.array([t], np.int32), np.array([pos], np.int32),
+            caches, cfg)
+        pos += 1
+    toks = [int(np.argmax(np.asarray(logits)[0, :cfg.vocab]))]
+    for _ in range(max_new - 1):
+        logits, caches = lm.decode_step_ref(
+            params, np.array([toks[-1]], np.int32),
+            np.array([pos], np.int32), caches, cfg)
+        pos += 1
+        toks.append(int(np.argmax(np.asarray(logits)[0, :cfg.vocab])))
+    return toks
+
+
+def run(quick: bool = False, smoke: bool = False) -> Dict:
+    results: Dict = {}
+
+    def emit(metric: str, value) -> None:
+        results[metric] = value
+        print(f"decode,{metric},{value:.4g}"
+              if isinstance(value, float) else f"decode,{metric},{value}")
+
+    cfg = get_config("lm-tiny")
+    caps = (8, 16) if smoke else (16, 32)
+    cap = caps[0]
+    iters = 10 if smoke else (30 if quick else 100)
+    n_prompts = 2 if smoke else 4
+    # prompt(4) + n_new must stay within the largest KV capacity; 24 still
+    # crosses the 16 -> 32 bucket boundary mid-generation
+    n_new = 6 if smoke else (12 if quick else 24)
+
+    params = lm.init_params(jax.random.PRNGKey(0), cfg)
+    t0 = time.perf_counter()
+    art_int = build_decode_artifact(params, cfg, datapath="int",
+                                    capacities=caps)
+    emit("compile_int_s", time.perf_counter() - t0)
+    t0 = time.perf_counter()
+    art_f32 = build_decode_artifact(params, cfg, datapath="f32",
+                                    capacities=caps)
+    emit("compile_f32_s", time.perf_counter() - t0)
+    emit("weight_bytes_int", art_int.weight_bytes())
+    emit("weight_bytes_f32", art_f32.weight_bytes())
+
+    # -- raw executable latency at b1 / b16 (AOT, post-warmup) --------------
+    for art in (art_int, art_f32):
+        art.dm.warmup((1, 16), _feeds(cfg, 1, cap))
+    for b in (1, 16):
+        feeds = _feeds(cfg, b, cap)
+        ms = {}
+        for name, art in (("int", art_int), ("f32", art_f32)):
+            r = art.dm.throughput(*feeds, iters=iters)
+            ms[name] = r["ms_per_call"]
+            emit(f"{name}_b{b}_ms", r["ms_per_call"])
+            emit(f"{name}_b{b}_steps_per_s", r["calls_per_s"])
+        emit(f"int_speedup_b{b}", ms["f32"] / ms["int"])
+        emit(f"int_ge_f32_b{b}", int(ms["int"] <= ms["f32"]))
+
+    # -- greedy decode through the engine -----------------------------------
+    reg = ArtifactRegistry()
+    adapter = DecodeAdapter()
+    reg.register("lm-int", art_int, adapter=adapter, default=True)
+    reg.register("lm-f32", art_f32, adapter=adapter)
+    eng = ServeEngine(reg, max_batch=16, buckets=(1, 2, 4, 8, 16))
+    base = eng.warmup()
+
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab, 4)) for _ in range(n_prompts)]
+    t0 = time.perf_counter()
+    out_int = greedy_generate(eng, prompts, n_new)
+    dt = time.perf_counter() - t0
+    emit("engine_tok_s", n_prompts * n_new / dt)
+    out_f32 = greedy_generate(eng, prompts, n_new, artifact="lm-f32")
+
+    after = eng.trace_counts()
+    emit("retraces_under_load", sum(after[k] - base[k] for k in after))
+    emit("int_f32_tokens_equal", int(out_int == out_f32))
+    want = _eager_greedy(params, cfg, prompts[0], n_new, caps[-1])
+    emit("decode_bitwise_vs_eager", int(out_int[0] == want))
+    eng.stop()
+    return results
+
+
+def write_json(results: Dict, path=None, *, quick: bool = False) -> str:
+    try:
+        from benchmarks.bench_io import write_bench_json
+    except ImportError:                       # run as a bare script
+        from bench_io import write_bench_json
+    return write_bench_json(results, benchmark="pr10",
+                            basename="BENCH_pr10.json", path=path,
+                            quick=quick)
+
+
+def main(argv=None) -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal run for the CI smoke step")
+    ap.add_argument("--json", default=None,
+                    help="output path (default: repo-root BENCH_pr10.json "
+                         "for full runs, temp dir for --quick/--smoke)")
+    args = ap.parse_args(argv)
+    results = run(quick=args.quick, smoke=args.smoke)
+    write_json(results, args.json, quick=args.quick or args.smoke)
+    # correctness gates hold at any size; the timing gates only at full
+    # iteration counts (b1 int-vs-f32 is a near-tie, noisy under --smoke)
+    gates = ["int_f32_tokens_equal", "decode_bitwise_vs_eager"]
+    if not (args.quick or args.smoke):
+        gates += ["int_ge_f32_b1", "int_ge_f32_b16"]
+    for gate in gates:
+        if not results.get(gate):
+            raise SystemExit(f"acceptance gate failed: {gate}")
+    if results.get("retraces_under_load"):
+        raise SystemExit("acceptance gate failed: retraces_under_load != 0")
+
+
+if __name__ == "__main__":
+    main()

@@ -17,8 +17,10 @@ quantize/dequantize census), and the observability benchmark to
 tracer disabled vs enabled, plus span-coverage accounting), and the
 per-layer search benchmark to ``BENCH_pr9.json`` (best searched
 mixed-precision plan vs best uniform grid point on the acc/bytes frontier,
-bit-exact registry serve of the searched artifact) — the machine-readable
-perf trajectory successive PRs diff against.
+bit-exact registry serve of the searched artifact), and the decode
+benchmark to ``BENCH_pr10.json`` (int vs f32 LM decode-step latency at
+b1/b16, engine greedy tokens/s, zero-retrace and bitwise-vs-eager gates)
+— the machine-readable perf trajectory successive PRs diff against.
 """
 
 from __future__ import annotations
@@ -37,7 +39,7 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default="",
                     help="comma list: table2,table3,fig5,roofline,compile,"
-                         "serve,cluster,farm,pr7,pr8,pr9")
+                         "serve,cluster,farm,pr7,pr8,pr9,pr10")
     ap.add_argument("--bench-json", default=None,
                     help="where the compile benchmark dict is written "
                          "(default: repo-root BENCH_pr2.json for full runs; "
@@ -103,6 +105,10 @@ def main(argv=None) -> None:
     if want("pr9"):
         from benchmarks import search_bench
         search_bench.write_json(search_bench.run(quick=args.quick),
+                                quick=args.quick)
+    if want("pr10"):
+        from benchmarks import decode_bench
+        decode_bench.write_json(decode_bench.run(quick=args.quick),
                                 quick=args.quick)
     if want("roofline"):
         from benchmarks import roofline

@@ -10,8 +10,8 @@ same traffic.  Ends with the engine's latency/throughput report.
 
   PYTHONPATH=src python examples/serve_fsl.py [--steps 80] [--requests 200]
 
-(Not to be confused with repro.launch.serve — the transformer decode demo;
-this is the few-shot runtime over repro.compile artifacts.)
+(The LM decode counterpart — same engine, different workload adapter —
+is examples/serve_decode.py.)
 """
 
 import argparse

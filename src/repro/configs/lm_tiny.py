@@ -1,0 +1,33 @@
+"""lm-tiny — the PR 10 decode-serving workload config.
+
+A deliberately small dense decoder (2 layers, d_model 64) whose decode step
+fits the integer datapath's f32-exact window at w8a8: every matmul's
+reachable accumulator stays far inside ±2^24, so the compiled int artifact
+is bit-for-bit with the interpreter (the same exactness story as resnet9).
+``pos="none"`` because rotary position ids are not graph ops (yet);
+``compute_dtype="float32"`` so the eager training stack is comparable to
+the f32 graph at tight tolerance.
+"""
+
+from repro.core.quant import FixedPointSpec, QuantConfig
+from repro.models.common import ArchConfig, register
+
+register(ArchConfig(
+    name="lm-tiny",
+    family="dense",
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=4,
+    d_ff=96,
+    vocab=97,                    # vocab_padded -> 256
+    tie_embeddings=False,
+    act="gelu",
+    pos="none",
+    max_seq=64,
+    norm_eps=1e-6,
+    quant=QuantConfig(weight=FixedPointSpec(8, 6, signed=True),
+                      act=FixedPointSpec(8, 4, signed=True)),
+    compute_dtype="float32",
+    remat=False,
+    prefill_chunk=8))

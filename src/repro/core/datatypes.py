@@ -49,6 +49,7 @@ __all__ = [
     "accumulator_spec",
     "threshold_output_spec",
     "datatype_rule",
+    "register_datatype_rule",
     "InferDataTypes",
     "LowerToIntegerDatapath",
     "FuseIntegerDatapath",
@@ -134,12 +135,39 @@ Rule = Callable[[Node, List[Optional[FixedPointSpec]], Graph],
 DATATYPE_RULES: Dict[str, Rule] = {}
 
 
-def datatype_rule(*ops: str):
+def register_datatype_rule(*ops: str, override: bool = False):
+    """Public registration decorator for per-op datatype rules (DESIGN.md §14).
+
+    A rule is ``fn(node, in_specs, graph) -> Optional[FixedPointSpec]`` —
+    the spec assigned to every output of ``node`` (``None`` keeps the
+    outputs floating point).  New workloads extend the IR by registering
+    rules for their ops next to their export code; nothing under
+    ``repro/core`` needs to know the op exists.
+
+    Re-registering an op raises — a silent overwrite would let two model
+    modules fight over an op's semantics with import order deciding the
+    winner.  Pass ``override=True`` to replace a rule on purpose.
+    """
+    if not ops or any(not isinstance(op, str) for op in ops):
+        raise TypeError("register_datatype_rule takes one or more op names")
+
     def deco(fn: Rule) -> Rule:
         for op in ops:
+            prev = DATATYPE_RULES.get(op)
+            if prev is not None and prev is not fn and not override:
+                raise ValueError(
+                    f"datatype rule for op '{op}' is already registered "
+                    f"({getattr(prev, '__name__', prev)!r}); pass "
+                    "override=True to replace it")
             DATATYPE_RULES[op] = fn
         return fn
     return deco
+
+
+def datatype_rule(*ops: str):
+    """Pre-PR 10 alias of :func:`register_datatype_rule` (same conflict
+    semantics — the silently-overwriting registration is gone)."""
+    return register_datatype_rule(*ops)
 
 
 @datatype_rule("im2col", "transpose", "maxpool", "flatten", "relu")
@@ -234,6 +262,22 @@ def _rule_quantize(node, in_specs, g):
 
 @datatype_rule("dequantize", "reduce_mean")
 def _rule_float(node, in_specs, g):
+    return None
+
+
+@register_datatype_rule("embed")
+def _rule_embed(node, in_specs, g):
+    """Token gather: rows of the table, so the table's grid passes through."""
+    return in_specs[0]
+
+
+@register_datatype_rule("rmsnorm", "silu", "gelu", "attn_decode",
+                        "attn_prefill")
+def _rule_float_transformer(node, in_specs, g):
+    """Normalization / smooth activations / softmax attention: genuinely
+    real-valued ops — the decode workload keeps them floating point and
+    re-enters the integer domain at the next activation quantizer (which
+    the lowering streamlines to a single ``quantize``)."""
     return None
 
 
@@ -379,6 +423,31 @@ def LowerToIntegerDatapath(g: Graph) -> Graph:
     # 2. walk in topological order, extending the integer domain
     for node in list(g.nodes):
         if node.op == "quantize":
+            # Exporter-placed (or rewritten, below) quantize: its output IS
+            # integer codes on the attr grid — register it so downstream
+            # matmuls see an integer-domain operand.
+            spec = FixedPointSpec(node.attrs["bits"],
+                                  node.attrs["frac_bits"],
+                                  node.attrs.get("signed", True))
+            int_dom.setdefault(node.outputs[0], spec)
+            g.dtypes[node.outputs[0]] = int_dom[node.outputs[0]]
+            continue
+        if node.op == "embed":
+            t_name, ids_name = node.inputs
+            wspec = g.dtypes.get(t_name)
+            if wspec is not None and t_name in g.initializers:
+                w = np.asarray(g.initializers[t_name])
+                codes = np.asarray(quant.quantize(w, wspec))
+                stored, packed = _storage_array(codes, wspec)
+                g.initializers[t_name] = stored
+                g.dtypes[t_name] = wspec
+                node.attrs = dict(node.attrs, w_packed=packed,
+                                  w_bits=wspec.total_bits)
+                int_dom[node.outputs[0]] = wspec
+                g.dtypes[node.outputs[0]] = wspec
+                continue
+            # unannotated table: a float gather; the generic frontier below
+            # has nothing to rewrite (ids are not grid tensors)
             continue
         if node.op == "mvau":
             x_name, w_name, t_name = node.inputs
@@ -465,6 +534,31 @@ def LowerToIntegerDatapath(g: Graph) -> Graph:
             out_spec = threshold_output_spec(
                 levels or 0, out_base, out_scale,
                 float(node.attrs.get("out_bias", 0.0)))
+            if xspec is None and out_spec is not None \
+                    and t_name in g.initializers \
+                    and node.attrs.get("channel_axis", -1) == -1:
+                t = np.asarray(g.initializers[t_name], np.float32)
+                if t.ndim == 1 and np.array_equal(
+                        t, np.asarray(quant.thresholds_for(out_spec),
+                                      np.float32)):
+                    # Float-fed activation quantizer whose table IS the
+                    # canonical grid for out_spec: by thresholds_for's
+                    # round-half-even contract the level count equals the
+                    # quantize() code, so the 2^b−1-way counting compare
+                    # streamlines to one round+clip and the output enters
+                    # the integer domain.  (The attention/norm ops between
+                    # quantizers stay float — this is where the decode
+                    # workload re-enters the int datapath.)
+                    node.op = "quantize"
+                    node.inputs = [x_name]
+                    node.attrs = {"bits": out_spec.total_bits,
+                                  "frac_bits": out_spec.frac_bits,
+                                  "signed": out_spec.signed}
+                    g.invalidate()
+                    _retire_initializer(g, t_name)
+                    int_dom[node.outputs[0]] = out_spec
+                    g.dtypes[node.outputs[0]] = out_spec
+                    continue
             if xspec is None or t_name not in g.initializers \
                     or out_spec is None \
                     or node.attrs.get("channel_axis", -1) != -1 \

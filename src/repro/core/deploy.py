@@ -226,8 +226,8 @@ class DeployedModel:
         the cache.
         """
         if len(self.input_names) != 1:
-            raise ValueError("warmup() supports single-input graphs; call "
-                             "the jitted program directly for multi-input")
+            return self._warmup_multi(buckets, example, cache=cache,
+                                      metrics=metrics, label=label)
         ex = jnp.asarray(example)
         if ex.ndim < 1:
             raise ValueError("example must be batched (leading batch axis)")
@@ -252,6 +252,52 @@ class DeployedModel:
                 ckey, hit = None, False
                 t0 = time.perf_counter()
                 exe = self._jitted.lower(x).compile()
+                dt = time.perf_counter() - t0
+            self._exec[ekey] = exe
+            self.compile_log.append({"bucket": int(b), "seconds": dt,
+                                     "cached": hit, "key": ckey})
+            if metrics is not None:
+                metrics.record_compile(name, int(b), dt, cached=hit)
+        self._buckets = bs
+        return bs
+
+    def _warmup_multi(self, buckets: Sequence[int], example, *,
+                      cache: Optional[Any] = None,
+                      metrics: Optional[Any] = None,
+                      label: Optional[str] = None) -> Tuple[int, ...]:
+        """Multi-input warmup (e.g. the decode graph's (tokens, pos, k*, v*)):
+        ``example`` is one BATCHED array per graph input, in input order.
+        Every input is padded along the shared leading batch axis, so one
+        bucket still means one executable; non-batch dims (KV capacity)
+        vary by calling warmup once per capacity."""
+        if not isinstance(example, (tuple, list)) \
+                or len(example) != len(self.input_names):
+            raise ValueError(
+                f"multi-input graph '{self.graph.name}' needs one batched "
+                f"example per input {self.input_names}")
+        samples = [jnp.asarray(e) for e in example]
+        if any(sm.ndim < 1 for sm in samples):
+            raise ValueError("examples must be batched (leading batch axis)")
+        bs = normalize_buckets(buckets)
+        name = label or self.graph.name
+        for b in bs:
+            xs = [jnp.zeros((b,) + tuple(sm.shape[1:]), sm.dtype)
+                  for sm in samples]
+            ekey = tuple(self._exec_key(x.shape, x.dtype) for x in xs)
+            if ekey in self._exec:
+                continue
+            if cache is not None:
+                ckey = cache.key(kind="deployed-model",
+                                 graph=self.fingerprint(),
+                                 shape=[list(x.shape) for x in xs],
+                                 dtype=[np.dtype(x.dtype).name for x in xs])
+                exe, hit, dt = cache.get_or_compile(
+                    ckey, lambda xs=xs: self._jitted.lower(*xs).compile(),
+                    meta={"artifact": name, "bucket": int(b)})
+            else:
+                ckey, hit = None, False
+                t0 = time.perf_counter()
+                exe = self._jitted.lower(*xs).compile()
                 dt = time.perf_counter() - t0
             self._exec[ekey] = exe
             self.compile_log.append({"bucket": int(b), "seconds": dt,
@@ -300,6 +346,13 @@ class DeployedModel:
         if (len(args) == 1 and self._exec and hasattr(args[0], "shape")
                 and not isinstance(args[0], jax.core.Tracer)):
             outs = self._dispatch(jnp.asarray(args[0]))
+        elif (len(args) > 1 and self._exec
+              and all(hasattr(a, "shape")
+                      and not isinstance(a, jax.core.Tracer) for a in args)):
+            xs = [jnp.asarray(a) for a in args]
+            ekey = tuple(self._exec_key(x.shape, x.dtype) for x in xs)
+            exe = self._exec.get(ekey)
+            outs = exe(*xs) if exe is not None else self._jitted(*xs)
         else:
             outs = self._jitted(*args)
         return outs[0] if len(self.output_names) == 1 else outs
@@ -377,8 +430,10 @@ class DeployedModel:
         are warmed or the batch exceeds them) — so a reported number is
         attributable to ONE executable in the bucket cache."""
         n = int(jnp.shape(inputs[0])[0]) if inputs and jnp.ndim(inputs[0]) else 1
-        run = (self._dispatch if len(inputs) == 1 and self._exec
-               else self._jitted)
+        if self._exec and len(inputs) >= 1:
+            run = self.__call__          # AOT bucket dispatch, single or multi
+        else:
+            run = self._jitted
         jax.block_until_ready(run(*inputs))              # warm-up / compile
         t0 = time.perf_counter()
         for _ in range(max(iters, 1)):

@@ -409,6 +409,41 @@ def _ex_gap(node: Node, x: jax.Array) -> jax.Array:
     return jnp.sum(x, axis=tuple(node.attrs["axes"]))
 
 
+# -- decode-workload ops (PR 10: models.lm export; see DESIGN.md §14) --------
+def _ex_embed(node: Node, table: jax.Array, ids: jax.Array) -> jax.Array:
+    """Token-id row gather.  After integer lowering the table holds codes
+    (packed int4 when ``w_packed``); gathering codes then dequantizing is
+    bit-for-bit the float gather — rows are untouched values either way."""
+    out = jnp.take(table, ids.astype(jnp.int32), axis=0)
+    if node.attrs.get("w_packed"):
+        from repro.core import quant
+
+        out = quant.unpack_int4(out)
+    return out
+
+
+def _ex_rmsnorm(node: Node, x: jax.Array, g: jax.Array) -> jax.Array:
+    # mirrors models.layers.rmsnorm exactly (f32 internal math) — the
+    # decode_step_ref ⇔ compiled-graph bitwise contract depends on it
+    eps = node.attrs.get("eps", 1e-6)
+    xf = x.astype(jnp.float32)
+    y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    return (y * g).astype(x.dtype)
+
+
+def _ex_attn_decode(node: Node, q, k_new, v_new, k_cache, v_cache, pos):
+    from repro.kernels import ref
+
+    return ref.attn_decode(q, k_new, v_new, k_cache, v_cache,
+                           pos.astype(jnp.int32), node.attrs["heads"])
+
+
+def _ex_attn_prefill(node: Node, q, k, v):
+    from repro.kernels import ref
+
+    return ref.attn_prefill(q, k, v, node.attrs["heads"])
+
+
 _EXECUTORS: Dict[str, Callable[..., jax.Array]] = {
     "im2col": _ex_im2col,
     "matmul": _ex_matmul,
@@ -428,6 +463,12 @@ _EXECUTORS: Dict[str, Callable[..., jax.Array]] = {
     "maxpool": lambda node, x: _maxpool(node, x),
     "relu": lambda node, x: jnp.maximum(x, 0),
     "flatten": lambda node, x: x.reshape(x.shape[0], -1),
+    "embed": _ex_embed,
+    "rmsnorm": _ex_rmsnorm,
+    "silu": lambda node, x: jax.nn.silu(x),
+    "gelu": lambda node, x: jax.nn.gelu(x),
+    "attn_decode": _ex_attn_decode,
+    "attn_prefill": _ex_attn_prefill,
 }
 
 

@@ -189,7 +189,7 @@ class SweepFarm:
                  arch: str = "resnet9", verbose: bool = True):
         if mode not in ("thread", "process"):
             raise ValueError(f"mode must be 'thread' or 'process', got {mode!r}")
-        recipe(arch).require_fsl_hooks()   # fail loudly BEFORE any training
+        recipe(arch).workload_hooks("fsl")  # fail loudly BEFORE any training
         self.cache_dir = cache_dir
         self.mgr = CheckpointManager(cache_dir)
         self.config = {
@@ -302,7 +302,7 @@ def _restore_point(cache_dir: str, key: str, width: int, bench_batch: int,
         raise ValueError(
             f"cache entry {key} was swept with arch '{stored}' but the "
             f"restore requested '{arch}' — refusing a wrong-shaped restore")
-    hooks = recipe(arch).require_fsl_hooks()
+    hooks = recipe(arch).workload_hooks("fsl")
     like = {
         "params": hooks.init_params(jax.random.PRNGKey(0), width),
         "probe_feats": np.zeros((bench_batch, hooks.feature_dim(width)),

@@ -281,7 +281,7 @@ def search(cache_dir: str, *, arch: str = "resnet9", width: int = 8,
     unscored — the rung itself is their proxy score.
     """
     t0 = time.perf_counter()
-    rec = recipe(arch).require_fsl_hooks()
+    rec = recipe(arch).workload_hooks("fsl")
     if rec.quant_layers is None:
         raise ValueError(
             f"recipe '{arch}' has no quant_layers hook; per-layer search "

@@ -59,7 +59,7 @@ class FSLPipeline:
                    **kwargs)
 
     def _hooks(self):
-        return recipe(self.arch).require_fsl_hooks()
+        return recipe(self.arch).workload_hooks("fsl")
 
     def features(self, params, x: jax.Array) -> jax.Array:
         fwd = self._hooks().forward

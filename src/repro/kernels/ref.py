@@ -7,6 +7,7 @@ and asserts allclose against the function here.  They are also the
 
 from __future__ import annotations
 
+import math
 from typing import Optional
 
 import jax
@@ -180,3 +181,56 @@ def gap(x: jax.Array) -> jax.Array:
     if jnp.issubdtype(x.dtype, jnp.integer):
         return jnp.sum(x.astype(jnp.int32), axis=(1, 2))
     return jnp.sum(x.astype(jnp.float32), axis=(1, 2))
+
+
+# ---------------------------------------------------------------------------
+# Decode-workload attention (PR 10): shared by the graph interpreter, the
+# compiled DeployedModel and models.lm.decode_step_ref — ONE definition so
+# "bit-for-bit with the interpreter" is a property of the code, not a hope.
+# All math is f32; no GQA broadcast (callers assert n_kv_heads == n_heads).
+# ---------------------------------------------------------------------------
+def attn_decode(q: jax.Array, k_new: jax.Array, v_new: jax.Array,
+                k_cache: jax.Array, v_cache: jax.Array, pos: jax.Array,
+                heads: int):
+    """One causal decode step over a fixed-capacity KV cache.
+
+    q/k_new/v_new: (B, D) f32 projections for the CURRENT token;
+    k_cache/v_cache: (B, C, D) with positions ``< pos`` filled;
+    pos: (B,) int32 write/read position per row.  Returns
+    ``(out (B, D), k_cache', v_cache')`` with the new K/V written at
+    ``pos`` (functional update — the serving layer owns cache storage).
+    """
+    B, D = q.shape
+    C = k_cache.shape[1]
+    hd = D // heads
+    slot = jnp.arange(C, dtype=jnp.int32)[None, :] == pos[:, None]  # (B, C)
+    kc = jnp.where(slot[..., None], k_new[:, None, :].astype(k_cache.dtype),
+                   k_cache)
+    vc = jnp.where(slot[..., None], v_new[:, None, :].astype(v_cache.dtype),
+                   v_cache)
+    qh = q.astype(jnp.float32).reshape(B, heads, hd)
+    kh = kc.astype(jnp.float32).reshape(B, C, heads, hd)
+    vh = vc.astype(jnp.float32).reshape(B, C, heads, hd)
+    s = jnp.einsum("bhd,bchd->bhc", qh, kh) / math.sqrt(hd)
+    live = jnp.arange(C, dtype=jnp.int32)[None, None, :] <= pos[:, None, None]
+    s = jnp.where(live, s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhc,bchd->bhd", w, vh).reshape(B, D)
+    return out.astype(q.dtype), kc, vc
+
+
+def attn_prefill(q: jax.Array, k: jax.Array, v: jax.Array,
+                 heads: int) -> jax.Array:
+    """Causal self-attention over a whole prompt: q/k/v (B, S, D) f32."""
+    B, S, D = q.shape
+    hd = D // heads
+    qh = q.astype(jnp.float32).reshape(B, S, heads, hd)
+    kh = k.astype(jnp.float32).reshape(B, S, heads, hd)
+    vh = v.astype(jnp.float32).reshape(B, S, heads, hd)
+    s = jnp.einsum("bqhd,bkhd->bhqk", qh, kh) / math.sqrt(hd)
+    causal = (jnp.arange(S, dtype=jnp.int32)[None, :]
+              <= jnp.arange(S, dtype=jnp.int32)[:, None])
+    s = jnp.where(causal[None, None, :, :], s, -jnp.inf)
+    w = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, vh).reshape(B, S, D)
+    return out.astype(q.dtype)

@@ -1,80 +1,39 @@
-"""Serving launcher: prefill + batched greedy decode with (optionally)
-bit-width-reduced weights — the paper's technique as the serving default.
+"""Deprecated shim — the decode-serving demo moved to
+``examples/serve_decode.py`` (and the servable decode runtime itself to
+:mod:`repro.serve.decode`), mirroring the PR 8 ``launch/`` → ``obs/``
+treatment.
 
-  PYTHONPATH=src python -m repro.launch.serve --arch qwen2.5-3b --reduced \
-      --bits 8 --tokens 16
+Kept so ``from repro.launch import serve`` and ``serve.main([...])`` keep
+working with the old flags (``--arch/--reduced/--bits/...`` eager decode
+loop); new code should use ``repro.serve.decode`` —
+``build_decode_artifact`` + ``DecodeAdapter`` + ``greedy_generate`` serve
+compiled int-datapath decode through the ``ServeEngine``.
 """
 
 from __future__ import annotations
 
-import argparse
-import time
+import importlib.util
+import warnings
+from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.launch.steps import (
-    make_decode_step,
-    model_module,
-    quantize_tree_for_serving,
-)
-from repro.models.common import get_config
+def _example():
+    path = (Path(__file__).resolve().parents[3] / "examples"
+            / "serve_decode.py")
+    spec = importlib.util.spec_from_file_location("_serve_decode_example",
+                                                  path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
 
 
 def main(argv=None):
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen2.5-3b")
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--bits", type=int, default=0, choices=[0, 4, 8],
-                    help="serving weight bit-width (0 = bf16)")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=8)
-    ap.add_argument("--tokens", type=int, default=16)
-    args = ap.parse_args(argv)
-
-    cfg = get_config(args.arch)
-    if args.reduced:
-        from repro.models.testing import reduce_config
-        cfg = reduce_config(cfg)
-    mod = model_module(cfg)
-
-    params = mod.init_params(jax.random.PRNGKey(0), cfg)
-    if args.bits:
-        params = quantize_tree_for_serving(params, args.bits)
-        print(f"serving at w{args.bits} "
-              f"({'packed int4' if args.bits == 4 else 'int8'} weights)")
-
-    B = args.batch
-    max_len = args.prompt_len + args.tokens + 1
-    rng = np.random.default_rng(0)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab, (B, args.prompt_len)),
-                         jnp.int32)
-    cache = mod.init_cache(cfg, B, max_len,
-                           dtype=jnp.dtype(cfg.compute_dtype))
-
-    decode = jax.jit(make_decode_step(cfg))
-
-    # prefill by stepping the prompt through the cache (small-model path;
-    # production uses the fused prefill + cache write)
-    tok = prompt[:, :1]
-    for t in range(args.prompt_len):
-        tok, cache = decode(params, {"tokens": prompt[:, t:t + 1]}, cache)
-        tok = tok[:, None]
-
-    out = []
-    t0 = time.time()
-    for _ in range(args.tokens):
-        tok, cache = decode(params, {"tokens": tok}, cache)
-        tok = tok[:, None]
-        out.append(tok)
-    jax.block_until_ready(tok)
-    dt = time.time() - t0
-    gen = jnp.concatenate(out, axis=1)
-    print(f"generated {args.tokens} tokens x {B} seqs in {dt*1e3:.0f} ms "
-          f"({B*args.tokens/dt:.1f} tok/s)")
-    print("sample:", np.asarray(gen[0][:12]))
-    return gen
+    warnings.warn(
+        "repro.launch.serve is deprecated; use examples/serve_decode.py "
+        "(engine-based compiled decode serving; --legacy for this loop) "
+        "or repro.serve.decode directly",
+        DeprecationWarning, stacklevel=2)
+    return _example().legacy_main(argv)
 
 
 if __name__ == "__main__":

@@ -19,6 +19,7 @@ paths*; this module stays mesh-agnostic.
 
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import Any, Dict, Optional, Tuple
 
@@ -421,3 +422,288 @@ def _hybrid_decode(params, x, cache, cfg, positions, kinds):
     new_cache["shared"] = jax.tree.map(lambda *xs: jnp.stack(xs, axis=0),
                                        *upd_shared)
     return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# PR 10: decode serving through the repro.compile datatype IR
+# ---------------------------------------------------------------------------
+# The exporters below put the dense decode/prefill step onto the core Graph
+# so the SAME compiler that builds resnet9 builds the LM: weights land as
+# fake-quantized initializers (annotated with their FixedPointSpec), every
+# matmul input passes through a FINN-style activation quantizer
+# (multithreshold over the canonical grid table — which
+# lower_to_integer_datapath streamlines to a single `quantize`), and the
+# genuinely real-valued ops (rmsnorm / gelu / silu / softmax attention) stay
+# float between quantizers.  `decode_step_ref` is the eager mirror of the
+# exported graph — bit-for-bit with the compiled artifact — while the
+# training-stack `decode_step` (bf16 matmuls, no per-matmul act quantizers)
+# remains the loose-tolerance sanity anchor.
+
+def _decode_exportable(cfg: ArchConfig) -> None:
+    """The exporter covers the plain dense family; fail loudly otherwise."""
+    problems = []
+    if cfg.family != "dense":
+        problems.append(f"family={cfg.family!r} (need 'dense')")
+    if cfg.attention != "gqa" or cfg.n_kv_heads != cfg.n_heads:
+        problems.append("grouped/latent attention (need n_kv_heads==n_heads)")
+    if cfg.pos != "none":
+        problems.append(f"pos={cfg.pos!r} (rotary ids are not graph ops yet)")
+    if cfg.qkv_bias or cfg.qk_norm:
+        problems.append("qkv_bias/qk_norm")
+    if cfg.moe_experts:
+        problems.append("moe")
+    if cfg.tie_embeddings:
+        problems.append("tie_embeddings")
+    if cfg.act not in ("gelu", "swiglu"):
+        problems.append(f"act={cfg.act!r}")
+    if problems:
+        raise ValueError(
+            f"config '{cfg.name}' is not decode-exportable: "
+            + "; ".join(problems))
+
+
+def _block_params(params: Params, i: int):
+    """Per-layer view of the stacked ``blocks`` tree, as numpy."""
+    import numpy as np
+
+    return jax.tree.map(lambda a: np.asarray(a[i]), params["blocks"])
+
+
+def _export_graph(params: Params, cfg: ArchConfig, *, decode: bool,
+                  name: Optional[str] = None):
+    import numpy as np
+
+    from repro.core import quant
+    from repro.core.graph import Graph, Node
+
+    _decode_exportable(cfg)
+    wspec, aspec = _wspec(cfg), _aspec(cfg)
+    D, H = cfg.d_model, cfg.n_heads
+    nodes = []
+    inits: Dict[str, Any] = {}
+    dtypes: Dict[str, Any] = {}
+
+    def w_init(nm, arr):
+        w = np.asarray(arr, np.float32)
+        if wspec is not None:
+            w = np.asarray(quant.fake_quant(jnp.asarray(w), wspec),
+                           np.float32)
+        inits[nm] = w
+        dtypes[nm] = wspec
+        return nm
+
+    def f_init(nm, arr):                 # float param (norm gains): no grid
+        inits[nm] = np.asarray(arr, np.float32)
+        return nm
+
+    def act_quant(x_t, out):
+        """FINN activation quantizer: multithreshold over the canonical grid
+        (exactly ``fake_quant(x, aspec)`` — see quant.thresholds_for).
+        Each node owns its table: integer lowering rewrites int-fed tables
+        in place, so sharing one initializer across quantizers would let
+        one rewrite clobber another's thresholds."""
+        if aspec is None:
+            return x_t
+        t_nm = f_init(out + "_t", quant.thresholds_for(aspec))
+        nodes.append(Node("multithreshold", [x_t, t_nm], [out],
+                          {"channel_axis": -1, "out_base": aspec.qmin,
+                           "out_scale": aspec.scale}))
+        return out
+
+    def matmul(x_t, w_nm, out):
+        nodes.append(Node("matmul", [x_t, w_nm], [out]))
+        return out
+
+    x = "x0"
+    nodes.append(Node("embed", [w_init("embed_w", params["embed"]), "tokens"],
+                      [x]))
+    cache_in, cache_out = [], []
+    for i in range(cfg.n_layers):
+        bp = _block_params(params, i)
+        p = f"l{i}"
+        nodes.append(Node("rmsnorm", [x, f_init(f"{p}.ln1_g", bp["ln1"]["g"])],
+                          [f"{p}.n1"], {"eps": cfg.norm_eps}))
+        hq = act_quant(f"{p}.n1", f"{p}.aq1")
+        q = matmul(hq, w_init(f"{p}.wq", bp["attn"]["wq"]["w"]), f"{p}.q")
+        k = matmul(hq, w_init(f"{p}.wk", bp["attn"]["wk"]["w"]), f"{p}.k")
+        v = matmul(hq, w_init(f"{p}.wv", bp["attn"]["wv"]["w"]), f"{p}.v")
+        if decode:
+            cache_in += [f"k{i}", f"v{i}"]
+            cache_out += [f"k{i}_out", f"v{i}_out"]
+            nodes.append(Node("attn_decode",
+                              [q, k, v, f"k{i}", f"v{i}", "pos"],
+                              [f"{p}.ao", f"k{i}_out", f"v{i}_out"],
+                              {"heads": H}))
+        else:
+            cache_out += [k, v]          # prefill: the projections ARE the cache
+            nodes.append(Node("attn_prefill", [q, k, v], [f"{p}.ao"],
+                              {"heads": H}))
+        aoq = act_quant(f"{p}.ao", f"{p}.aq2")
+        matmul(aoq, w_init(f"{p}.wo", bp["attn"]["wo"]["w"]), f"{p}.o")
+        nodes.append(Node("add", [x, f"{p}.o"], [f"{p}.r1"]))
+        nodes.append(Node("rmsnorm",
+                          [f"{p}.r1", f_init(f"{p}.ln2_g", bp["ln2"]["g"])],
+                          [f"{p}.n2"], {"eps": cfg.norm_eps}))
+        h2q = act_quant(f"{p}.n2", f"{p}.aq3")
+        if cfg.act == "gelu":
+            matmul(h2q, w_init(f"{p}.w_up", bp["mlp"]["w_up"]["w"]),
+                   f"{p}.up")
+            nodes.append(Node("gelu", [f"{p}.up"], [f"{p}.h"]))
+        else:                            # swiglu
+            matmul(h2q, w_init(f"{p}.w_gate", bp["mlp"]["w_gate"]["w"]),
+                   f"{p}.gate")
+            nodes.append(Node("silu", [f"{p}.gate"], [f"{p}.sg"]))
+            matmul(h2q, w_init(f"{p}.w_up", bp["mlp"]["w_up"]["w"]),
+                   f"{p}.up")
+            nodes.append(Node("mul", [f"{p}.sg", f"{p}.up"], [f"{p}.h"]))
+        hq2 = act_quant(f"{p}.h", f"{p}.aq4")   # mirrors L.mlp's mid-MLP QAT
+        matmul(hq2, w_init(f"{p}.w_down", bp["mlp"]["w_down"]["w"]),
+               f"{p}.dn")
+        mq = act_quant(f"{p}.dn", f"{p}.aq5")   # mirrors _attn_block mlp_out
+        nodes.append(Node("add", [f"{p}.r1", mq], [f"{p}.r2"]))
+        x = f"{p}.r2"
+    nodes.append(Node("rmsnorm",
+                      [x, f_init("final_g", params["final_norm"]["g"])],
+                      ["nf"], {"eps": cfg.norm_eps}))
+    fq = act_quant("nf", "head_aq")
+    matmul(fq, w_init("lm_head_w", params["lm_head"]["w"]), "logits")
+    inputs = ["tokens"] + (["pos"] + cache_in if decode else [])
+    gname = name or (f"{cfg.name or 'lm'}-" + ("decode" if decode else
+                                               "prefill"))
+    g = Graph(nodes=nodes, inputs=inputs, outputs=["logits"] + cache_out,
+              initializers=inits, name=gname)
+    g.dtypes.update(dtypes)
+    g.toposort()
+    return g
+
+
+def export_decode_graph(params: Params, cfg: ArchConfig, *,
+                        name: Optional[str] = None):
+    """One-token decode step as a core Graph.
+
+    Inputs: ``tokens (B,) int32``, ``pos (B,) int32``, then per layer
+    ``k{i}/v{i} (B, C, d_model) f32`` — capacity ``C`` is shape-polymorphic,
+    so ONE graph serves every KV bucket and the deploy layer AOT-compiles an
+    executable per (batch bucket × capacity bucket).  Outputs: ``logits
+    (B, vocab_padded)`` then the updated ``k{i}_out/v{i}_out`` caches.
+    """
+    return _export_graph(params, cfg, decode=True, name=name)
+
+
+def export_prefill_graph(params: Params, cfg: ArchConfig, *,
+                         name: Optional[str] = None):
+    """Whole-prompt forward as a core Graph: ``tokens (B, S)`` ->
+    ``logits (B, S, V)`` plus per-layer K/V projections ``(B, S, d_model)``
+    (they ARE the prefill cache)."""
+    return _export_graph(params, cfg, decode=False, name=name)
+
+
+def decode_step_ref(params: Params, tokens: jax.Array, pos: jax.Array,
+                    caches, cfg: ArchConfig):
+    """Eager f32 mirror of :func:`export_decode_graph` — bit-for-bit with
+    the compiled artifact (same helpers, same op order; ``fake_quant`` ==
+    the graph's grid multithreshold == the int datapath's ``quantize``).
+
+    tokens/pos: (B,) int32; caches: [k0, v0, k1, v1, ...] each (B, C, D).
+    Returns ``(logits (B, V), new_caches)``.
+    """
+    from repro.core.quant import fake_quant
+    from repro.kernels import ref
+
+    wspec, aspec = _wspec(cfg), _aspec(cfg)
+
+    def fq_w(w):
+        return fake_quant(w, wspec) if wspec is not None else w
+
+    def aq(t):
+        return fake_quant(t, aspec) if aspec is not None else t
+
+    x = jnp.take(fq_w(params["embed"]).astype(jnp.float32),
+                 tokens.astype(jnp.int32), axis=0)
+    new_caches = []
+    for i in range(cfg.n_layers):
+        bp = jax.tree.map(lambda a: a[i], params["blocks"])
+        hq = aq(L.rmsnorm(bp["ln1"], x, cfg.norm_eps))
+        q = jnp.matmul(hq, fq_w(bp["attn"]["wq"]["w"]))
+        k = jnp.matmul(hq, fq_w(bp["attn"]["wk"]["w"]))
+        v = jnp.matmul(hq, fq_w(bp["attn"]["wv"]["w"]))
+        o, kc, vc = ref.attn_decode(q, k, v, caches[2 * i], caches[2 * i + 1],
+                                    pos.astype(jnp.int32), cfg.n_heads)
+        new_caches += [kc, vc]
+        x = x + jnp.matmul(aq(o), fq_w(bp["attn"]["wo"]["w"]))
+        h2q = aq(L.rmsnorm(bp["ln2"], x, cfg.norm_eps))
+        if cfg.act == "gelu":
+            h = jax.nn.gelu(jnp.matmul(h2q, fq_w(bp["mlp"]["w_up"]["w"])))
+        else:
+            h = (jax.nn.silu(jnp.matmul(h2q, fq_w(bp["mlp"]["w_gate"]["w"])))
+                 * jnp.matmul(h2q, fq_w(bp["mlp"]["w_up"]["w"])))
+        dn = jnp.matmul(aq(h), fq_w(bp["mlp"]["w_down"]["w"]))
+        x = x + aq(dn)
+    fq = aq(L.rmsnorm(params["final_norm"], x, cfg.norm_eps))
+    logits = jnp.matmul(fq, fq_w(params["lm_head"]["w"]))
+    return logits, new_caches
+
+
+def example_decode_feeds(cfg: ArchConfig, *, batch: int = 2,
+                         capacity: int = 8, seed: int = 0):
+    """Named feeds for :func:`export_decode_graph` golden-IO verification."""
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    feeds = {
+        "tokens": rng.randint(0, cfg.vocab, size=(batch,)).astype(np.int32),
+        "pos": rng.randint(0, capacity, size=(batch,)).astype(np.int32),
+    }
+    for i in range(cfg.n_layers):
+        feeds[f"k{i}"] = rng.randn(batch, capacity,
+                                   cfg.d_model).astype(np.float32)
+        feeds[f"v{i}"] = rng.randn(batch, capacity,
+                                   cfg.d_model).astype(np.float32)
+    return feeds
+
+
+def example_prefill_feeds(cfg: ArchConfig, *, batch: int = 2, seq: int = 4,
+                          seed: int = 0):
+    import numpy as np
+
+    rng = np.random.RandomState(seed)
+    return {"tokens": rng.randint(0, cfg.vocab,
+                                  size=(batch, seq)).astype(np.int32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeHooks:
+    """The decode workload's hook bundle (the second instance of the
+    recipe workload-hooks protocol; FSL is the first — DESIGN.md §14)."""
+
+    export_decode: Any
+    export_prefill: Any
+    step_ref: Any
+    example_feeds: Any
+
+
+def _export_for_compile(model, qcfg):
+    """``repro.compile`` exporter: model = {"params": ..., "cfg": ArchConfig}."""
+    params, cfg = model["params"], model["cfg"]
+    if qcfg is not None and qcfg is not cfg.quant:
+        cfg = dataclasses.replace(cfg, quant=qcfg)
+    return export_decode_graph(params, cfg)
+
+
+def _register_recipe():
+    from repro.core.recipes import register_recipe
+
+    register_recipe(
+        "lm-decode",
+        [],   # datatype passes ride in via repro.compile(datapath="int");
+              # no CNN streamlining, and float attention is not HW-mappable
+        description=("dense decoder-LM decode/prefill: datatype inference + "
+                     "integer lowering only"),
+        exporter=_export_for_compile,
+        hooks={"decode": DecodeHooks(export_decode_graph,
+                                     export_prefill_graph,
+                                     decode_step_ref,
+                                     example_decode_feeds)})
+
+
+_register_recipe()

@@ -18,8 +18,10 @@ batches (zero retraces after warmup), ``PrototypeStore`` keeps online class
 means bit-for-bit equal to offline NCM, and ``ArtifactRegistry`` serves
 several bit-width artifacts side by side with atomic default hot-swap.
 
-Not to be confused with ``repro.launch.serve`` — the transformer decode
-serving demo; THIS package is the paper's few-shot runtime.
+Since PR 10 the engine is workload-generic: ``repro.serve.workload``
+defines the adapter protocol (request kinds, batching, warmup) and
+``repro.serve.decode`` serves quantized LM greedy decode through the same
+engine — see ``examples/serve_decode.py``.
 """
 
 from repro.serve.bucketing import bucket_for, pad_to_bucket, pow2_buckets
@@ -32,7 +34,9 @@ from repro.serve.engine import (
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ArtifactRegistry, ServedArtifact
 from repro.serve.store import PrototypeStore
+from repro.serve.workload import ArtifactAdapter, FSLAdapter, RequestKind
 
-__all__ = ["ArtifactRegistry", "ClassifyResult", "PrototypeStore",
-           "ServeEngine", "ServeMetrics", "ServeOverload", "ServedArtifact",
+__all__ = ["ArtifactAdapter", "ArtifactRegistry", "ClassifyResult",
+           "FSLAdapter", "PrototypeStore", "RequestKind", "ServeEngine",
+           "ServeMetrics", "ServeOverload", "ServedArtifact",
            "TenantOverQuota", "bucket_for", "pad_to_bucket", "pow2_buckets"]

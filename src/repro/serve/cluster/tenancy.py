@@ -98,7 +98,8 @@ class TenantRegistry(ArtifactRegistry):
         view_meta = dict(meta or art.meta)
         view_meta.update({"tenant": tenant, "backbone": backbone})
         return super().register(f"{tenant}{SEP}{backbone}", art.feats,
-                                store=self._store_factory(), meta=view_meta)
+                                store=self._store_factory(), meta=view_meta,
+                                adapter=art.adapter)
 
     # -- tenants ------------------------------------------------------------
     def add_tenant(self, tenant: str,

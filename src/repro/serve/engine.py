@@ -23,8 +23,10 @@ camera-fed accelerator) under production traffic discipline:
   requests follow the registry default, which hot-swaps atomically at
   batch granularity.
 
-Distinct from ``repro.launch.serve`` (the LLM decode-loop demo): this is
-the few-shot runtime over ``repro.compile`` artifacts.
+Workload specifics (what a request kind means, how a group executes) live
+in the artifact's :class:`~repro.serve.workload.ArtifactAdapter`; the
+engine itself is workload-agnostic — few-shot classify and LM decode
+(``repro.serve.decode``) ride the same admission/coalescing machinery.
 """
 
 from __future__ import annotations
@@ -36,13 +38,11 @@ import time
 from concurrent.futures import Future
 from typing import Any, Dict, Hashable, List, Optional, Sequence, Tuple
 
-import numpy as np
-
 from repro.core.deploy import normalize_buckets, pow2_buckets
 from repro.obs import get_tracer
-from repro.serve.bucketing import pad_to_bucket
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ArtifactRegistry
+from repro.serve.workload import ClassifyResult, default_adapter
 
 __all__ = ["ClassifyResult", "ServeEngine", "ServeOverload",
            "TenantOverQuota"]
@@ -60,23 +60,14 @@ class TenantOverQuota(ServeOverload):
     all quota rejections while the victim sails through."""
 
 
-@dataclasses.dataclass(frozen=True)
-class ClassifyResult:
-    """Per-query predictions against the artifact's current store."""
-
-    class_ids: List[Hashable]       # len n, registered class ids
-    sims: np.ndarray                # (n, C) cosine similarities
-    artifact: str
-
-
 @dataclasses.dataclass
 class _Request:
-    kind: str                       # "register" | "classify"
-    x: np.ndarray                   # (n, H, W, C)
-    class_id: Optional[Hashable]
+    kind: str                       # a RequestKind name on the adapter
+    payload: Any                    # kind-specific, validated at submit
     artifact: Optional[str]
     future: Future
     t_submit: float
+    n_rows: int = 1                 # batch-row footprint (coalescing unit)
     tenant: Optional[Hashable] = None
     # request-lifecycle tracing (repro.obs): one trace ID per request plus
     # the perf_counter timestamps the worker turns into post-hoc spans —
@@ -89,7 +80,7 @@ class _Request:
 
     @property
     def n(self) -> int:
-        return self.x.shape[0]
+        return self.n_rows
 
 
 class ServeEngine:
@@ -206,24 +197,40 @@ class ServeEngine:
         return self.registry.trace_counts()
 
     # -- admission ----------------------------------------------------------
+    def submit(self, kind: str, payload: Any, *,
+               artifact: Optional[str] = None,
+               timeout: Optional[float] = None,
+               tenant: Optional[Hashable] = None,
+               trace: Optional[str] = None) -> Future:
+        """Queue one request of ``kind`` for the artifact's workload
+        adapter.  The adapter's :class:`RequestKind` validates the payload
+        here, in the caller's thread — malformed payloads and unknown
+        kinds raise ``ValueError`` immediately rather than failing the
+        future.  Admission (queue bounds, tenant quotas, tracing) is
+        workload-agnostic and identical for every kind."""
+        return self._submit(kind, payload, artifact, timeout, tenant, trace)
+
     def submit_register(self, class_id: Hashable, x,
                         artifact: Optional[str] = None,
                         timeout: Optional[float] = None,
                         tenant: Optional[Hashable] = None,
                         trace: Optional[str] = None) -> Future:
         """Queue support images (k, H, W, C) for online registration of
-        ``class_id``.  Future resolves to the class's new shot count."""
-        return self._submit("register", x, class_id, artifact, timeout,
-                            tenant, trace)
+        ``class_id``.  Future resolves to the class's new shot count.
+        Thin wrapper over ``submit("register", ...)``."""
+        return self.submit("register", {"class_id": class_id, "x": x},
+                           artifact=artifact, timeout=timeout, tenant=tenant,
+                           trace=trace)
 
     def submit_classify(self, x, artifact: Optional[str] = None,
                         timeout: Optional[float] = None,
                         tenant: Optional[Hashable] = None,
                         trace: Optional[str] = None) -> Future:
         """Queue query images (n, H, W, C).  Future resolves to a
-        :class:`ClassifyResult`."""
-        return self._submit("classify", x, None, artifact, timeout, tenant,
-                            trace)
+        :class:`ClassifyResult`.  Thin wrapper over
+        ``submit("classify", ...)``."""
+        return self.submit("classify", {"x": x}, artifact=artifact,
+                           timeout=timeout, tenant=tenant, trace=trace)
 
     @staticmethod
     def _root_span(trace: str) -> str:
@@ -232,17 +239,34 @@ class ServeEngine:
         exported at fulfil time."""
         return trace + "-00"
 
-    def _submit(self, kind, x, class_id, artifact, timeout,
+    def _resolve_adapter(self, artifact: Optional[str]):
+        """The workload adapter behind an artifact name, or ``None`` when
+        the name (or the empty-registry default) does not resolve — in
+        which case validation is skipped and the request fails in the
+        worker with the same ``KeyError`` it always did."""
+        try:
+            art = self.registry.get(artifact)
+        except KeyError:
+            return None
+        return art.adapter if art.adapter is not None else default_adapter()
+
+    def _submit(self, kind, payload, artifact, timeout,
                 tenant=None, trace=None) -> Future:
         t_sub = time.perf_counter()
-        x = np.asarray(x, np.float32)
-        if x.ndim == 3:
-            x = x[None]
-        if x.ndim != 4 or x.shape[0] == 0:
-            raise ValueError(f"expected (n, H, W, C) images, got {x.shape}")
-        if x.shape[0] > self.max_batch:
-            raise ValueError(f"request of {x.shape[0]} samples exceeds "
-                             f"max_batch={self.max_batch}; split it")
+        adapter = self._resolve_adapter(artifact)
+        n_rows = 1
+        if adapter is not None:
+            rk = adapter.kinds.get(kind)
+            if rk is None:
+                raise ValueError(
+                    f"unknown request kind {kind!r}; artifact "
+                    f"{(artifact or self.registry.default_name)!r} accepts "
+                    f"{sorted(adapter.kinds)}")
+            payload = rk.validate(payload, self)
+            n_rows = int(rk.rows(payload))
+            if n_rows > self.max_batch:
+                raise ValueError(f"request of {n_rows} samples exceeds "
+                                 f"max_batch={self.max_batch}; split it")
         tr = self.tracer
         # the ID is the ONE tracing allocation the disabled path keeps: it
         # rides error messages and upstream (cluster) propagation
@@ -267,8 +291,8 @@ class ServeEngine:
                           status="rejected:over_quota",
                           attrs={"tenant": tenant, "kind": kind})
             raise
-        req = _Request(kind, x, class_id, artifact, Future(), t_sub, tenant,
-                       trace=trace)
+        req = _Request(kind, payload, artifact, Future(), t_sub,
+                       n_rows=n_rows, tenant=tenant, trace=trace)
         req.future.trace_id = trace        # client-side trace handle
         req.t_enq = time.perf_counter()    # before put: the worker may
         try:                               # dequeue it immediately
@@ -419,14 +443,17 @@ class ServeEngine:
     def _process(self, batch: List[_Request]) -> None:
         # Resolve each request's artifact (default resolved once per batch,
         # so a hot-swap lands between batches and "artifact=None" requests
-        # join the default's group), then group by the COMPILED FEATS
-        # OBJECT, not the artifact name: tenant views of one backbone share
-        # its executables, and the point of coalescing is ONE padded
-        # backbone exec for all of them — the per-tenant part (the store) is
-        # routed per request afterwards.  Arrival order inside each feats
-        # group survives.
+        # join the default's group), then group by the artifact's workload
+        # adapter plus the adapter's own ``group_key`` — for the default
+        # FSL adapter that key is the COMPILED FEATS OBJECT, not the
+        # artifact name: tenant views of one backbone share its
+        # executables, and the point of coalescing is ONE padded backbone
+        # exec for all of them — the per-tenant part (the store) is routed
+        # per request afterwards.  Arrival order inside each group
+        # survives.
         default = None
-        groups: Dict[int, List[Tuple[Any, _Request]]] = {}
+        groups: Dict[Tuple[int, Hashable],
+                     Tuple[Any, List[Tuple[Any, _Request]]]] = {}
         for r in batch:
             try:
                 if r.artifact is None:
@@ -438,96 +465,29 @@ class ServeEngine:
             except KeyError as e:
                 self._fail(r, e)
                 continue
-            groups.setdefault(id(art.feats), []).append((art, r))
-        for pairs in groups.values():
-            self._run_group(pairs)
+            adapter = (art.adapter if art.adapter is not None
+                       else default_adapter())
+            key = (id(adapter), adapter.group_key(art))
+            groups.setdefault(key, (adapter, []))[1].append((art, r))
+        for adapter, pairs in groups.values():
+            self._run_group(adapter, pairs)
 
-    def _run_group(self, pairs: List[Tuple[Any, _Request]]) -> None:
-        reqs = [r for _, r in pairs]
-        t_g0 = time.perf_counter()
-        try:
-            x = np.concatenate([r.x for r in reqs], axis=0) \
-                if len(reqs) > 1 else reqs[0].x
-            padded, n_real, bucket = pad_to_bucket(x, self.buckets)
-            t_x0 = time.perf_counter()
-            feats = np.asarray(pairs[0][0].feats(padded))[:n_real]
-            t_x1 = time.perf_counter()
-            self.metrics.record_batch(n_real, bucket)
-        except Exception as e:                        # noqa: BLE001
-            for r in reqs:
-                self._fail(r, e)
-            return
-        for r in reqs:
-            r.t_exec1 = t_x1
-        tr = self.tracer
-        if tr.enabled:
-            # one batch-scope span on its own trace (the padding-overhead
-            # view), plus queue/coalesce/exec children on each request's
-            # trace — all post-hoc from timestamps the worker already
-            # holds, pushed in ONE record_many call so the per-event cost
-            # stays a tight loop instead of 3 tracer calls per request
-            evs = [("serve.batch", t_g0, t_x1, tr.new_trace("batch"),
-                    None, None, None,
-                    {"n_real": n_real, "bucket": bucket,
-                     "padded": bucket - n_real, "requests": len(reqs),
-                     "artifact": pairs[0][0].name})]
-            for art, r in pairs:
-                root = r.trace + "-00"
-                evs.append(("serve.queue", r.t_enq, r.t_deq, r.trace,
-                            root, None, None, None))
-                evs.append(("serve.coalesce", r.t_deq, t_x0, r.trace,
-                            root, None, None, None))
-                evs.append(("serve.exec", t_x0, t_x1, r.trace, root,
-                            None, None,
-                            {"bucket": bucket, "n_real": n_real,
-                             "artifact": art.name, "tenant": r.tenant}))
-            tr.record_many(evs)
-        # Strict arrival order, but consecutive classifies on the SAME
-        # artifact between two of its registers see the SAME store state —
-        # classify them as ONE run (one NCM head call per run, not per
-        # request; at 64 single-frame queries per batch the per-request
-        # head dispatch would otherwise cost more than the backbone batch
-        # itself).  A run must stay slice-contiguous in ``feats``, so any
-        # intervening request — a register, or another artifact's classify
-        # — flushes it.
-        run: List[Tuple[_Request, int, int]] = []     # (req, start, end)
-        run_art: Any = None
-
-        def flush_run() -> None:
-            nonlocal run_art
-            art, run_art = run_art, None
-            if not run:
-                return
-            lo, hi = run[0][1], run[-1][2]
-            try:
-                ids, sims = art.store.classify(feats[lo:hi])
-            except Exception as exc:                  # noqa: BLE001
-                for r, _, _ in run:
-                    self._fail(r, exc)
-                run.clear()
-                return
-            for r, s, e in run:
-                self._fulfill(r, ClassifyResult(
-                    ids[s - lo:e - lo], sims[s - lo:e - lo], art.name))
-            run.clear()
-
-        off = 0
+    def _run_group(self, adapter: Any,
+                   pairs: List[Tuple[Any, _Request]]) -> None:
+        # Kinds were validated at submit against the THEN-resolved adapter;
+        # a default hot-swap between submit and dispatch can hand a request
+        # to an adapter that never heard of its kind.  Fail those futures
+        # here (never the worker) and serve the rest.
+        good: List[Tuple[Any, _Request]] = []
         for art, r in pairs:
-            start, off = off, off + r.n
-            if r.kind == "classify":
-                if run and run_art is not art:
-                    flush_run()
-                run_art = art
-                run.append((r, start, off))
+            if r.kind not in adapter.kinds:
+                self._fail(r, ValueError(
+                    f"artifact {art.name!r} does not accept request kind "
+                    f"{r.kind!r}; have {sorted(adapter.kinds)}"))
                 continue
-            flush_run()
-            try:
-                out = art.store.register(r.class_id, feats[start:off])
-            except Exception as exc:                  # noqa: BLE001
-                self._fail(r, exc)
-                continue
-            self._fulfill(r, out)
-        flush_run()
+            good.append((art, r))
+        if good:
+            adapter.run_group(self, good)
 
     def _fail_queued(self, exc: Exception) -> None:
         while True:

@@ -14,14 +14,11 @@ wholly on the new artifact, never a mix.
 from __future__ import annotations
 
 import dataclasses
-import inspect
 import threading
 from typing import Any, Callable, Dict, Optional, Tuple
 
-import numpy as np
-
-from repro.core.deploy import DeployedModel
 from repro.serve.store import PrototypeStore
+from repro.serve.workload import default_adapter
 
 __all__ = ["ArtifactRegistry", "ServedArtifact"]
 
@@ -40,56 +37,32 @@ class ServedArtifact:
     (weight bytes, episode accuracy, latency, cache key), so an operator
     can ask a LIVE registry why each artifact is there without re-opening
     the sweep JSON.  Purely descriptive: the engine never reads it.
+
+    ``adapter`` picks the workload (request kinds, batching, warmup) this
+    artifact serves; ``None`` means the default few-shot
+    :class:`~repro.serve.workload.FSLAdapter` — the pre-PR-10 behaviour.
     """
 
     name: str
     feats: Callable
     store: PrototypeStore
     meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    adapter: Optional[Any] = None
 
     def trace_count(self) -> Optional[int]:
-        if isinstance(self.feats, DeployedModel):
-            return self.feats.trace_count
         fn = getattr(self.feats, "trace_count", None)
         if fn is not None:
-            return int(fn())
+            return int(fn() if callable(fn) else fn)
         dm = getattr(self.feats, "deployed_model", None)
         return int(dm.trace_count) if dm is not None else None
 
     def warmup(self, buckets, img: int, cache=None, metrics=None) -> None:
-        """Pre-compile (or cache-restore) every bucket executable, then
-        prime the store's classify head for the same bucket set.  The
-        ``cache``/``metrics`` extras are forwarded when the feats callable
-        understands them (DeployedModel and FSLPipeline.deploy fns do);
-        plain warmup callables keep the old two-argument contract."""
-        if isinstance(self.feats, DeployedModel):
-            self.feats.warmup(
-                buckets, example=np.zeros((1, img, img, 3), np.float32),
-                cache=cache, metrics=metrics, label=self.name)
-        else:
-            fn = getattr(self.feats, "warmup", None)
-            if fn is not None:
-                try:
-                    accepts = "cache" in inspect.signature(fn).parameters
-                except (TypeError, ValueError):
-                    accepts = False
-                if accepts:
-                    fn(buckets, img=img, cache=cache, metrics=metrics,
-                       label=self.name)
-                else:
-                    fn(buckets, img=img)
-        # the backbone executables are warm, but without this a fresh
-        # process's first classify still stalls ~100 ms compiling the NCM
-        # head ops — probe the feature dim off the smallest bucket and
-        # build the head's per-bucket programs now.  Best-effort: feats
-        # callables that can't take an image batch just skip it.
-        try:
-            small = min(int(b) for b in buckets)
-            feat = np.asarray(self.feats(
-                np.zeros((small, img, img, 3), np.float32)))
-            self.store.prime(int(feat.shape[-1]), buckets)
-        except Exception:
-            pass
+        """Pre-compile (or cache-restore) every bucket executable —
+        delegated to the artifact's workload adapter (the default FSL
+        adapter keeps the old DeployedModel/pipeline warmup plus
+        store-head priming)."""
+        ad = self.adapter if self.adapter is not None else default_adapter()
+        ad.warmup(self, buckets, img=img, cache=cache, metrics=metrics)
 
 
 class ArtifactRegistry:
@@ -103,17 +76,20 @@ class ArtifactRegistry:
     def register(self, name: str, feats: Callable, *,
                  store: Optional[PrototypeStore] = None,
                  default: bool = False,
-                 meta: Optional[Dict[str, Any]] = None) -> ServedArtifact:
+                 meta: Optional[Dict[str, Any]] = None,
+                 adapter: Optional[Any] = None) -> ServedArtifact:
         """Add (or atomically replace) an artifact.  The first registration
         becomes the default; ``default=True`` swaps it explicitly.  ``meta``
         attaches provenance (e.g. the sweep measurements behind a published
-        Pareto point) readable via :meth:`metadata`."""
+        Pareto point) readable via :meth:`metadata`.  ``adapter`` selects a
+        non-default workload (e.g. ``DecodeAdapter``); ``None`` serves
+        few-shot register/classify as before."""
         # explicit None check: an EMPTY store is falsy (len() == 0), and
         # `store or ...` would silently swap a caller's custom store (e.g. a
         # sharded-classify store) for a fresh plain one
         art = ServedArtifact(name, feats,
                              PrototypeStore() if store is None else store,
-                             dict(meta or {}))
+                             dict(meta or {}), adapter)
         with self._lock:
             self._artifacts[name] = art
             if default or self._default is None:

@@ -1,0 +1,255 @@
+"""PR 10 tentpole — quantized LM decode through the compiler and the engine.
+
+Covers: the exported decode graph's bitwise chain (compiled int == compiled
+f32 == eager ``decode_step_ref``), integer-datapath lowering onto
+``matmul_int``/``mvau_int`` with int8 embed storage, fused prefill vs
+stepped decode, decode served through ``ServeEngine`` (bit-for-bit vs
+eager, request-kind plumbing, sequence lifecycle), KV-capacity growth, and
+(slow) a mixed-traffic zero-retrace soak across the bucketed KV cache.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+import repro.configs.lm_tiny  # noqa: F401  (registers the arch)
+from repro.models import lm
+from repro.models.common import get_config
+from repro.serve import ArtifactRegistry, ServeEngine
+from repro.serve.decode import (
+    DecodeAdapter,
+    build_decode_artifact,
+    greedy_generate,
+)
+
+CFG = get_config("lm-tiny")
+CAPS = (8, 16)
+BUCKETS = (1, 2, 4, 8)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return lm.init_params(jax.random.PRNGKey(0), CFG)
+
+
+@pytest.fixture(scope="module")
+def art_int(params):
+    # verify=True golden-IO checks compiled-vs-interpreter inside compile()
+    return build_decode_artifact(params, CFG, datapath="int",
+                                 capacities=CAPS, with_prefill=True)
+
+
+@pytest.fixture(scope="module")
+def art_f32(params):
+    return build_decode_artifact(params, CFG, datapath="f32",
+                                 capacities=CAPS)
+
+
+@pytest.fixture(scope="module")
+def engine(art_int, art_f32):
+    reg = ArtifactRegistry()
+    adapter = DecodeAdapter()
+    reg.register("int", art_int, adapter=adapter, default=True)
+    reg.register("f32", art_f32, adapter=adapter)
+    eng = ServeEngine(reg, max_batch=8, buckets=BUCKETS)
+    eng.warmup()
+    yield eng
+    eng.stop()
+
+
+def _eager_greedy(params, prompt, max_new, capacity=16):
+    """Reference loop over ``decode_step_ref`` at batch 1: returns the
+    greedy tokens and the per-step logits rows (prompt's last + decodes)."""
+    caches = [np.zeros((1, capacity, CFG.d_model), np.float32)
+              for _ in range(2 * CFG.n_layers)]
+    pos, logits = 0, None
+    for t in prompt:
+        logits, caches = lm.decode_step_ref(
+            params, np.array([t], np.int32), np.array([pos], np.int32),
+            caches, CFG)
+        pos += 1
+    rows = [np.asarray(logits)[0, :CFG.vocab]]
+    toks = [int(np.argmax(rows[-1]))]
+    for _ in range(max_new - 1):
+        logits, caches = lm.decode_step_ref(
+            params, np.array([toks[-1]], np.int32),
+            np.array([pos], np.int32), caches, CFG)
+        pos += 1
+        rows.append(np.asarray(logits)[0, :CFG.vocab])
+        toks.append(int(np.argmax(rows[-1])))
+    return toks, rows
+
+
+# ---------------------------------------------------------------------------
+# compiled artifacts vs the eager reference
+# ---------------------------------------------------------------------------
+def test_compiled_int_f32_ref_bitwise(art_int, art_f32, params):
+    feeds = lm.example_decode_feeds(CFG, batch=2, capacity=8, seed=3)
+    out_i = art_int.dm(**feeds)
+    out_f = art_f32.dm(**feeds)
+    caches = [feeds[f"{kv}{li}"] for li in range(CFG.n_layers)
+              for kv in ("k", "v")]
+    logits_ref, caches_ref = lm.decode_step_ref(
+        params, feeds["tokens"], feeds["pos"], caches, CFG)
+    assert np.array_equal(np.asarray(out_i[0]), np.asarray(logits_ref))
+    assert np.array_equal(np.asarray(out_i[0]), np.asarray(out_f[0]))
+    for a, b, c in zip(out_i[1:], out_f[1:], caches_ref):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+        assert np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_int_lowering_hits_integer_fast_paths(art_int):
+    ops = [n.op for n in art_int.dm.graph.nodes]
+    assert "matmul" not in ops            # every matmul lowered
+    assert ops.count("matmul_int") >= 8
+    assert ops.count("mvau_int") >= 1     # threshold fusion fired
+    assert "attn_decode" in ops
+
+
+def test_embed_stored_int8_and_weight_shrink(art_int, art_f32):
+    g = art_int.dm.graph
+    (emb,) = [n for n in g.nodes if n.op == "embed"]
+    table_name = next(i for i in emb.inputs if i in g.initializers)
+    table = np.asarray(g.initializers[table_name])
+    assert table.dtype == np.int8
+    assert art_int.weight_bytes() * 3 < art_f32.weight_bytes()
+
+
+def test_fused_prefill_matches_stepped_decode(art_int, params):
+    prompt = np.array([[5, 11, 2, 40, 8, 19]], np.int32)
+    outs = art_int.dm_prefill(tokens=prompt)
+    logits_pf = np.asarray(outs[0])                 # (1, S, V)
+    # step the same prompt through the decode executable
+    caches = [np.zeros((1, 8, CFG.d_model), np.float32)
+              for _ in range(2 * CFG.n_layers)]
+    logits = None
+    for pos in range(prompt.shape[1]):
+        logits, caches = lm.decode_step_ref(
+            params, prompt[:, pos], np.array([pos], np.int32), caches, CFG)
+    np.testing.assert_allclose(logits_pf[:, -1], np.asarray(logits),
+                               rtol=1e-5, atol=1e-5)
+    # the prefill outputs ARE the kv cache rows the stepped path built
+    for li in range(CFG.n_layers):
+        k_step = caches[2 * li][:, :prompt.shape[1]]
+        k_fused = np.asarray(outs[1 + 2 * li])
+        np.testing.assert_allclose(k_fused, k_step, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# decode through the engine
+# ---------------------------------------------------------------------------
+def test_engine_decode_bitwise_vs_eager(engine, params):
+    """Single sequence at a fixed capacity: every logits row the engine
+    returns is bit-for-bit the eager reference's."""
+    prompt = [7, 3, 1]
+    toks_ref, rows_ref = _eager_greedy(params, prompt, 5, capacity=8)
+    pf = engine.submit("prefill", {"seq": "bw", "tokens": prompt}).result(60)
+    rows = [pf.logits]
+    toks = [pf.token]
+    for _ in range(4):
+        r = engine.submit("decode", {"seq": "bw"}).result(60)
+        rows.append(r.logits)
+        toks.append(r.token)
+    engine.submit("release", {"seq": "bw"}).result(60)
+    assert toks == toks_ref
+    for got, want in zip(rows, rows_ref):
+        assert np.array_equal(got, want)
+
+
+def test_engine_greedy_int_equals_f32(engine):
+    prompts = [[3, 14, 15], [9, 2], [7, 7, 7, 7]]
+    out_int = greedy_generate(engine, prompts, 6)
+    out_f32 = greedy_generate(engine, prompts, 6, artifact="f32")
+    assert out_int == out_f32
+
+
+def test_engine_decode_request_plumbing(engine):
+    # unknown sequence fails the FUTURE (worker-side), kind errors raise
+    # at submit (caller-side)
+    with pytest.raises(KeyError):
+        engine.submit("decode", {"seq": "ghost"}).result(60)
+    with pytest.raises(ValueError, match="unknown request kind"):
+        engine.submit("classify", {"x": np.zeros((1, 4, 4, 3))})
+    with pytest.raises(ValueError, match="needs 'seq'"):
+        engine.submit("decode", {})
+    with pytest.raises(ValueError, match="non-empty"):
+        engine.submit("prefill", {"seq": "s", "tokens": []})
+
+
+def test_engine_sequence_lifecycle(engine):
+    engine.submit("prefill", {"seq": "life", "tokens": [1, 2]}).result(60)
+    # double prefill on a live sequence fails the future
+    with pytest.raises(ValueError, match="already active"):
+        engine.submit("prefill", {"seq": "life", "tokens": [3]}).result(60)
+    pos = engine.submit("release", {"seq": "life"}).result(60)
+    assert pos == 2
+    # released name is reusable
+    engine.submit("prefill", {"seq": "life", "tokens": [4]}).result(60)
+    engine.submit("release", {"seq": "life"}).result(60)
+
+
+def test_kv_capacity_growth_no_retrace(engine, params):
+    """Decode past the first KV bucket: the sequence grows 8 -> 16 and the
+    greedy tokens keep matching the eager reference — with zero retraces
+    (the (batch x capacity) executable set was completed at warmup)."""
+    base = engine.trace_counts()
+    prompt = [4, 9, 12, 33, 2]
+    want, _ = _eager_greedy(params, prompt, 9, capacity=16)
+    (got,) = greedy_generate(engine, [prompt], 9)   # pos crosses 8
+    assert got == want
+    after = engine.trace_counts()
+    assert all(after[k] == base[k] for k in after)
+
+
+def test_tenant_quota_applies_to_decode(art_int):
+    reg = ArtifactRegistry()
+    reg.register("int", art_int, adapter=DecodeAdapter(), default=True)
+    eng = ServeEngine(reg, max_batch=8, buckets=BUCKETS, max_queue=8,
+                      tenant_quota=2, start=False)
+    from repro.serve import TenantOverQuota
+    eng.submit("prefill", {"seq": "q0", "tokens": [1]}, tenant="noisy")
+    eng.submit("prefill", {"seq": "q1", "tokens": [1]}, tenant="noisy")
+    with pytest.raises(TenantOverQuota):
+        eng.submit("prefill", {"seq": "q2", "tokens": [1]}, tenant="noisy")
+    eng.submit("prefill", {"seq": "q3", "tokens": [1]}, tenant="calm")
+    eng.stop(drain=False)
+
+
+@pytest.mark.slow
+def test_decode_soak_zero_retrace(engine, params):
+    """Mixed prefill/decode/release traffic crossing capacity buckets:
+    hundreds of requests, zero retraces, and spot-checked bitwise accuracy
+    against the eager reference."""
+    rng = np.random.default_rng(7)
+    base = engine.trace_counts()
+    live = {}
+    checked = 0
+    for i in range(60):
+        seq = f"soak-{i}"
+        prompt = [int(t) for t in rng.integers(0, CFG.vocab,
+                                               int(rng.integers(1, 7)))]
+        n_new = int(rng.integers(4, 11))            # some cross capacity 8
+        live[seq] = (prompt, n_new)
+    futs = {s: engine.submit("prefill", {"seq": s, "tokens": p})
+            for s, (p, _) in live.items()}
+    toks = {s: [f.result(120).token] for s, f in futs.items()}
+    remaining = {s: n - 1 for s, (_, n) in live.items()}
+    rounds = 0
+    while any(n > 0 for n in remaining.values()):
+        rounds += 1
+        batch = [s for s, n in remaining.items() if n > 0]
+        futs = [(s, engine.submit("decode", {"seq": s})) for s in batch]
+        for s, f in futs:
+            toks[s].append(f.result(120).token)
+            remaining[s] -= 1
+    for s in live:
+        engine.submit("release", {"seq": s})
+    # spot-check a few sequences bitwise vs eager
+    for s in list(live)[:5]:
+        prompt, n_new = live[s]
+        want, _ = _eager_greedy(params, prompt, n_new, capacity=16)
+        assert toks[s] == want
+        checked += 1
+    assert checked == 5
+    after = engine.trace_counts()
+    assert all(after[k] == base[k] for k in after), (base, after)

@@ -1,0 +1,131 @@
+"""PR 10 API redesign — the de-resnet9-ified core surfaces.
+
+Covers: the generic ``BuildRecipe.workload_hooks(kind)`` protocol and the
+``require_fsl_hooks`` deprecation shim, the public
+``register_datatype_rule`` decorator (conflict detection + ``override=``
+escape hatch), and the engine's adapter-backed request-kind table
+(unknown kinds rejected at submit, in the caller's thread).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.datatypes import DATATYPE_RULES, register_datatype_rule
+from repro.core.recipes import recipe
+from repro.serve import ArtifactRegistry, FSLAdapter, ServeEngine
+from repro.serve.workload import RequestKind, default_adapter
+
+
+# ---------------------------------------------------------------------------
+# workload_hooks protocol
+# ---------------------------------------------------------------------------
+def test_workload_hooks_fsl_kind():
+    hooks = recipe("resnet9").workload_hooks("fsl")
+    assert callable(hooks.init_params)
+    assert callable(hooks.forward)
+    assert callable(hooks.feature_dim)
+
+
+def test_workload_hooks_decode_kind():
+    hooks = recipe("lm-decode").workload_hooks("decode")
+    assert callable(hooks.export_decode)
+    assert callable(hooks.export_prefill)
+    assert callable(hooks.step_ref)
+    assert callable(hooks.example_feeds)
+
+
+def test_workload_hooks_unknown_kind_lists_available():
+    with pytest.raises(ValueError, match="no FSL hooks"):
+        recipe("lm-decode").workload_hooks("fsl")
+    with pytest.raises(ValueError, match="fsl"):
+        recipe("resnet9").workload_hooks("decode")
+
+
+def test_require_fsl_hooks_shim_equivalent():
+    rec = recipe("resnet9")
+    with pytest.deprecated_call():
+        shimmed = rec.require_fsl_hooks()
+    hooks = rec.workload_hooks("fsl")
+    # the shim returns the recipe itself (old contract: attribute access on
+    # the recipe), and those attributes are exactly the hook bundle's
+    assert shimmed is rec
+    assert shimmed.init_params is hooks.init_params
+    assert shimmed.forward is hooks.forward
+    assert shimmed.feature_dim is hooks.feature_dim
+
+
+# ---------------------------------------------------------------------------
+# register_datatype_rule
+# ---------------------------------------------------------------------------
+def test_register_datatype_rule_conflict_raises():
+    assert "relu" in DATATYPE_RULES          # seeded by the core rules
+    original = DATATYPE_RULES["relu"]
+    with pytest.raises(ValueError, match="already registered"):
+        @register_datatype_rule("relu")
+        def _clashing_rule(node, in_specs, graph):
+            return None
+    assert DATATYPE_RULES["relu"] is original     # conflict left it intact
+
+
+def test_register_datatype_rule_override():
+    original = DATATYPE_RULES["relu"]
+    try:
+        @register_datatype_rule("relu", override=True)
+        def _replacement(node, in_specs, graph):
+            return None
+        assert DATATYPE_RULES["relu"] is _replacement
+    finally:
+        DATATYPE_RULES["relu"] = original
+
+
+def test_register_datatype_rule_new_op_and_reregister_same_fn():
+    assert "totally-new-op" not in DATATYPE_RULES
+    try:
+        @register_datatype_rule("totally-new-op")
+        def _rule(node, in_specs, graph):
+            return None
+        # re-registering the SAME function is idempotent, not a conflict
+        register_datatype_rule("totally-new-op")(_rule)
+        assert DATATYPE_RULES["totally-new-op"] is _rule
+    finally:
+        DATATYPE_RULES.pop("totally-new-op", None)
+
+
+def test_register_datatype_rule_rejects_bad_args():
+    with pytest.raises(TypeError):
+        register_datatype_rule()
+    with pytest.raises(TypeError):
+        register_datatype_rule(42)
+
+
+# ---------------------------------------------------------------------------
+# adapter-backed request kinds on the engine
+# ---------------------------------------------------------------------------
+def test_engine_rejects_unknown_request_kind():
+    reg = ArtifactRegistry()
+    reg.register("fsl", lambda x: np.asarray(x).reshape(len(x), -1))
+    eng = ServeEngine(reg, max_batch=4, start=False)
+    with pytest.raises(ValueError, match="unknown request kind"):
+        eng.submit("decode", {"seq": "s"})
+    # the error names the kinds the artifact's adapter DOES accept
+    with pytest.raises(ValueError, match="classify"):
+        eng.submit("nope", {"x": np.zeros((1, 4, 4, 3), np.float32)})
+    eng.stop(drain=False)
+
+
+def test_default_adapter_is_fsl_with_legacy_kinds():
+    ad = default_adapter()
+    assert isinstance(ad, FSLAdapter)
+    assert sorted(ad.kinds) == ["classify", "register"]
+    assert all(isinstance(k, RequestKind) for k in ad.kinds.values())
+
+
+def test_fsl_validation_still_raises_at_submit():
+    reg = ArtifactRegistry()
+    reg.register("fsl", lambda x: np.asarray(x).reshape(len(x), -1))
+    eng = ServeEngine(reg, max_batch=4, start=False)
+    with pytest.raises(ValueError, match="expected \\(n, H, W, C\\)"):
+        eng.submit_classify(np.zeros((8, 8), np.float32))
+    with pytest.raises(ValueError, match="exceeds"):
+        eng.submit_classify(np.zeros((5, 8, 8, 3), np.float32))
+    eng.stop(drain=False)
